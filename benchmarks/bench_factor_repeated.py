@@ -1,0 +1,10 @@
+"""Thin per-figure wrapper (DESIGN.md experiment index) → benchmarks.run."""
+from .run import main as _main
+
+
+def main(argv=None):
+    return _main(["--figures", "8"] + (argv or []))
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

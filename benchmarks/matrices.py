@@ -1,0 +1,189 @@
+"""Synthetic benchmark-matrix suite mirroring the paper's 37 SuiteSparse
+classes (SuiteSparse itself is not downloadable offline).
+
+Classes and the real matrices they stand in for:
+  circuit_*    — extremely sparse, irregular (ASIC_680k, circuit5M, rajat*)
+  asic_*       — circuit + a few dense power-net rows/cols: the class where
+                 supernodal solvers generate huge fill (paper §3.1 calls out
+                 ASIC_680k/ASIC_680ks/circuit5M explicitly)
+  powergrid_*  — grid Laplacian + long-range ties (TSOPF, case39 family)
+  fem2d_*      — 5-point Poisson stencils (thermal*, apache*)
+  fem3d_*      — 7-point stencils (G3_circuit-ish, parabolic_fem)
+  banded_*     — narrow band + random off-band (s3dkq4m2-ish)
+  kkt_*        — saddle-point KKT blocks (nlpkkt80 stand-in; indefinite,
+                 exercises static pivoting + perturbation)
+  unsym_*      — general unsymmetric random (raefsky*, venkat*)
+
+Sizes are scaled to a 1-core CPU budget; every generator is seeded and
+deterministic. 37 matrices total, as in the paper.
+"""
+from __future__ import annotations
+
+import numpy as np
+import scipy.sparse as sp
+
+from repro.core.matrix import CSR
+
+
+def _laplacian_of_edges(n, rows, cols, vals, diag_jitter, rng):
+    a = sp.coo_matrix((vals, (rows, cols)), shape=(n, n))
+    a = a + a.T
+    d = np.abs(a).sum(axis=1).A.ravel() + rng.uniform(0.1, 1.0, n) * diag_jitter
+    return (sp.diags(d) - a).tocsr()
+
+
+def circuit_like(n, seed, avg_deg=3.0, locality=16, long_frac=0.005):
+    """Circuit netlists are LOCAL graphs (placed cells talk to neighbors,
+    plus a few long wires) — uniform random graphs are expanders with no
+    small separators and would misrepresent the class."""
+    rng = np.random.default_rng(seed)
+    m = int(n * avg_deg / 2)
+    rows = rng.integers(0, n, m)
+    delta = rng.geometric(1.0 / locality, m)
+    cols = np.clip(rows + rng.choice([-1, 1], m) * delta, 0, n - 1)
+    ml = int(m * long_frac)                   # a few cross-chip wires
+    rows = np.concatenate([rows, rng.integers(0, n, ml)])
+    cols = np.concatenate([cols, rng.integers(0, n, ml)])
+    vals = rng.uniform(0.1, 10.0, len(rows))  # conductances
+    keep = rows != cols
+    return _laplacian_of_edges(n, rows[keep], cols[keep], vals[keep], 1.0, rng)
+
+
+def asic_like(n, seed, avg_deg=3.0, n_dense=4):
+    rng = np.random.default_rng(seed)
+    a = circuit_like(n, seed, avg_deg).tolil()
+    # dense power-net rows/cols (the supernodal fill bomb)
+    for i in rng.integers(0, n, n_dense):
+        js = rng.integers(0, n, n // 20)
+        a[i, js] = rng.uniform(0.01, 1.0, len(js))
+        a[js, i] = rng.uniform(0.01, 1.0, len(js))
+        a[i, i] = 100.0
+    return a.tocsr()
+
+
+def powergrid_like(nx, ny, seed, extra_frac=0.05):
+    rng = np.random.default_rng(seed)
+    n = nx * ny
+    g = sp.lil_matrix((n, n))
+    idx = lambda i, j: i * ny + j
+    rows, cols, vals = [], [], []
+    for i in range(nx):
+        for j in range(ny):
+            for di, dj in ((0, 1), (1, 0)):
+                if i + di < nx and j + dj < ny:
+                    rows.append(idx(i, j)); cols.append(idx(i + di, j + dj))
+                    vals.append(rng.uniform(0.5, 5.0))
+    m = int(n * extra_frac)
+    rows += list(rng.integers(0, n, m)); cols += list(rng.integers(0, n, m))
+    vals += list(rng.uniform(0.1, 2.0, m))
+    rows, cols, vals = np.array(rows), np.array(cols), np.array(vals)
+    keep = rows != cols
+    return _laplacian_of_edges(n, rows[keep], cols[keep], vals[keep], 0.5, rng)
+
+
+def fem2d(nx, ny, seed=0):
+    rng = np.random.default_rng(seed)
+    ex = np.ones(nx)
+    ey = np.ones(ny)
+    tx = sp.diags([-ex[:-1], 2 * ex, -ex[:-1]], [-1, 0, 1])
+    ty = sp.diags([-ey[:-1], 2 * ey, -ey[:-1]], [-1, 0, 1])
+    a = sp.kronsum(tx, ty).tocsr()
+    a = a + sp.diags(rng.uniform(0.0, 0.1, a.shape[0]))
+    return a
+
+
+def fem3d(nx, ny, nz, seed=0):
+    rng = np.random.default_rng(seed)
+    def t(m):
+        e = np.ones(m)
+        return sp.diags([-e[:-1], 2 * e, -e[:-1]], [-1, 0, 1])
+    a = sp.kronsum(sp.kronsum(t(nx), t(ny)), t(nz)).tocsr()
+    return a + sp.diags(rng.uniform(0.0, 0.1, a.shape[0]))
+
+
+def banded(n, bw, seed, fill=0.6):
+    rng = np.random.default_rng(seed)
+    diags = []
+    offs = []
+    for k in range(1, bw + 1):
+        if rng.random() < fill:
+            diags += [rng.normal(size=n - k), rng.normal(size=n - k)]
+            offs += [k, -k]
+    a = sp.diags(diags, offs, shape=(n, n))
+    a = a + sp.diags(rng.uniform(2 * bw, 3 * bw, n))
+    return a.tocsr()
+
+
+def kkt(nh, nc, seed):
+    rng = np.random.default_rng(seed)
+    h = sp.random(nh, nh, density=4.0 / nh,
+                  random_state=np.random.RandomState(seed))
+    h = h + h.T + sp.diags(rng.uniform(1, 3, nh))
+    a = sp.random(nc, nh, density=6.0 / nh,
+                  random_state=np.random.RandomState(seed + 1))
+    z = sp.coo_matrix((nc, nc))
+    kkt_m = sp.bmat([[h, a.T], [a, z]], format="csr")
+    # tiny regularization so the matrix is nonsingular but still exercises
+    # matching + perturbation
+    reg = sp.diags(np.concatenate([np.zeros(nh), -1e-4 * np.ones(nc)]))
+    return (kkt_m + reg).tocsr()
+
+
+def unsym_random(n, density, seed):
+    rng = np.random.default_rng(seed)
+    a = sp.random(n, n, density=density,
+                  random_state=np.random.RandomState(seed), format="csr")
+    return (a + sp.diags(rng.uniform(1, 2, n) * rng.choice([-1, 1], n))).tocsr()
+
+
+def suite(scale=1.0):
+    """The 37-matrix suite. scale shrinks sizes for --quick runs."""
+    s = lambda v: max(int(v * scale), 64)
+    mats = []
+    # 8 circuit
+    for i, n in enumerate([2000, 4000, 8000, 12000, 16000, 24000, 32000, 48000]):
+        mats.append((f"circuit_{n//1000}k", lambda n=n, i=i: circuit_like(s(n), 100 + i)))
+    # 4 asic-like (dense-row fill bombs)
+    for i, n in enumerate([2000, 6000, 12000, 24000]):
+        mats.append((f"asic_{n//1000}k", lambda n=n, i=i: asic_like(s(n), 200 + i)))
+    # 5 powergrid
+    for i, (nx, ny) in enumerate([(40, 50), (60, 70), (80, 90), (100, 110), (120, 140)]):
+        mats.append((f"powergrid_{nx*ny//1000}k",
+                     lambda nx=nx, ny=ny, i=i: powergrid_like(
+                         max(int(nx * scale**0.5), 8),
+                         max(int(ny * scale**0.5), 8), 300 + i)))
+    # 6 fem2d
+    for i, (nx, ny) in enumerate([(40, 40), (56, 56), (70, 70), (85, 85),
+                                  (100, 100), (120, 120)]):
+        mats.append((f"fem2d_{nx}x{ny}",
+                     lambda nx=nx, ny=ny, i=i: fem2d(
+                         max(int(nx * scale**0.5), 8),
+                         max(int(ny * scale**0.5), 8), 400 + i)))
+    # 4 fem3d
+    for i, m in enumerate([10, 13, 16, 20]):
+        mats.append((f"fem3d_{m}^3",
+                     lambda m=m, i=i: fem3d(max(int(m * scale**0.34), 4),
+                                            max(int(m * scale**0.34), 4),
+                                            max(int(m * scale**0.34), 4),
+                                            500 + i)))
+    # 4 banded
+    for i, (n, bw) in enumerate([(3000, 8), (6000, 12), (10000, 16), (16000, 24)]):
+        mats.append((f"banded_{n//1000}k_bw{bw}",
+                     lambda n=n, bw=bw, i=i: banded(s(n), bw, 600 + i)))
+    # 3 kkt
+    for i, (nh, nc) in enumerate([(1500, 500), (3000, 1000), (6000, 2000)]):
+        mats.append((f"kkt_{(nh+nc)//1000}k",
+                     lambda nh=nh, nc=nc, i=i: kkt(s(nh), s(nc), 700 + i)))
+    # 3 unsym random
+    for i, (n, d) in enumerate([(2000, 0.002), (5000, 0.001), (10000, 0.0006)]):
+        mats.append((f"unsym_{n//1000}k",
+                     lambda n=n, d=d, i=i: unsym_random(s(n), d, 800 + i)))
+    assert len(mats) == 37
+    return mats
+
+
+def load(name_fn):
+    name, fn = name_fn
+    a = fn().tocsr()
+    a.sort_indices()
+    return name, CSR.from_scipy(a), a

@@ -1,0 +1,76 @@
+"""Repeated-solve production scenario (paper §3.2): transient circuit
+simulation — one analysis, thousands of refactor+solve steps.
+
+A linear RC network driven by a time-varying source, backward-Euler
+integration:  (G + C/dt) v_t = C/dt v_{t-1} + i(t).
+The conductance matrix values change every Newton/time step (here: dt
+modulation) while the sparsity pattern is fixed — exactly HYLU's
+repeated-solve optimization.
+
+    PYTHONPATH=src python examples/circuit_transient.py
+"""
+import time
+
+import numpy as np
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "benchmarks"))
+
+from repro.core import CSR, analyze, factor, refactor, solve
+from repro.core import baselines as B
+
+
+def rc_network(n, seed=0):
+    from matrices import circuit_like
+    g = circuit_like(n, seed).tocsr()
+    rng = np.random.default_rng(seed)
+    c = rng.uniform(1e-12, 1e-9, n)          # node capacitances
+    return g, c
+
+
+def main():
+    n = 3000
+    g, c = rc_network(n)
+    A0 = CSR.from_scipy(g)
+    n_steps = 40
+    dt = 1e-6
+
+    t0 = time.perf_counter()
+    an = analyze(A0)
+    t_analyze = time.perf_counter() - t0
+    print(f"analysis: {t_analyze*1e3:.0f} ms "
+          f"(mode={an.choice.mode}, ordering={an.ordering_name})")
+
+    rng = np.random.default_rng(7)
+    v = np.zeros(n)
+    st = None
+    t_fac, t_sol = 0.0, 0.0
+    diag_idx = np.where(A0.indices == np.repeat(
+        np.arange(n), np.diff(A0.indptr)))[0]
+    for step in range(n_steps):
+        dt_k = dt * (1.0 + 0.5 * np.sin(step / 5.0))     # variable step
+        data = A0.data.copy()
+        data[diag_idx] += c / dt_k
+        Ak = CSR(n, A0.indptr, A0.indices, data)
+        t0 = time.perf_counter()
+        st = refactor(st, Ak) if st is not None else factor(an, Ak)
+        t_fac += time.perf_counter() - t0
+        i_src = np.zeros(n)
+        i_src[rng.integers(0, n, 5)] = rng.normal(size=5)
+        rhs = c / dt_k * v + i_src
+        t0 = time.perf_counter()
+        v, info = solve(st, rhs)
+        t_sol += time.perf_counter() - t0
+        assert info["residual"] < 1e-8, (step, info)
+
+    print(f"{n_steps} transient steps: refactor {t_fac*1e3:.0f} ms total "
+          f"({t_fac/n_steps*1e3:.1f} ms/step), solve {t_sol*1e3:.0f} ms total")
+    print(f"amortized analysis share: "
+          f"{t_analyze/(t_analyze+t_fac+t_sol)*100:.1f}% "
+          f"(one-time, reused {n_steps}×)")
+    print("final |v| =", float(np.abs(v).max()))
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Quickstart: solve a sparse system Ax=b with HYLU.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import scipy.sparse as sp
+
+from repro.core import CSR, HyluOptions, solve_system
+
+# build a small FEM-ish system
+n = 2500
+nx = int(np.sqrt(n))
+e = np.ones(nx)
+t = sp.diags([-e[:-1], 2 * e, -e[:-1]], [-1, 0, 1])
+a = sp.kronsum(t, t).tocsr()
+a = a + sp.diags(np.random.default_rng(0).uniform(0, 0.1, a.shape[0]))
+b = np.random.default_rng(1).normal(size=a.shape[0])
+
+A = CSR.from_scipy(a)
+x, info = solve_system(A, b)
+
+print(f"n={A.n} nnz={A.nnz}")
+print(f"kernel mode selected : {info['mode']}")
+print(f"ordering selected    : {info['ordering']}")
+print(f"residual |Ax-b|/|b|  : {info['residual']:.3e}")
+print(f"pivot perturbations  : {info['n_perturb']}")
+print(f"refinement steps     : {info['n_refine']}")
+t = info["timings"]
+print(f"preprocess {t['preprocess']['total']*1e3:.1f} ms | "
+      f"factor {t['factor']['factor']*1e3:.1f} ms")
+assert info["residual"] < 1e-10
+print("OK")

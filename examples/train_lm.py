@@ -1,0 +1,52 @@
+"""End-to-end training driver: train a ~100M-param phi3-family model for a
+few hundred steps on the synthetic pipeline, with checkpointing.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.data.pipeline import SyntheticLM
+from repro.models import transformer as T
+from repro.optim import adamw
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    # ~100M params: phi3 family topology, scaled down
+    cfg = ArchConfig(name="phi3-100m", family="dense", n_layers=6,
+                     d_model=512, n_heads=8, n_kv_heads=4, head_dim=64,
+                     d_ff=2048, vocab=32000, act="swiglu", rope_type="std")
+    params = T.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    n_params = sum(p.size for p in jax.tree.leaves(params))
+    print(f"{cfg.name}: {n_params/1e6:.1f}M params, "
+          f"devices={len(jax.devices())}")
+
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=128, global_batch=8, seed=0)
+    tr = Trainer(
+        TrainerConfig(total_steps=args.steps, ckpt_every=100,
+                      ckpt_dir=args.ckpt_dir, log_every=20, seq_chunk=128),
+        cfg, params, data,
+        opt_cfg=adamw.AdamWConfig(lr=1e-3, warmup_steps=20,
+                                  total_steps=args.steps))
+    tr.install_signal_handler()
+    resumed = tr.maybe_resume()
+    if resumed:
+        print(f"resumed from step {resumed}")
+    log = tr.run()
+    print(f"loss: {log[0]['loss']:.3f} → {log[-1]['loss']:.3f} "
+          f"over {len(log)} steps; stragglers={tr.n_stragglers}")
+    assert log[-1]["loss"] < log[0]["loss"]
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Assigned architecture config (see registry.py for the literature source)."""
+from .registry import COMMAND_R_PLUS_104B as CONFIG
+
+CONFIG = CONFIG

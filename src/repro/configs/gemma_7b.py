@@ -1,0 +1,4 @@
+"""Assigned architecture config (see registry.py for the literature source)."""
+from .registry import GEMMA_7B as CONFIG
+
+CONFIG = CONFIG

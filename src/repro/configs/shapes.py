@@ -1,0 +1,78 @@
+"""Input-shape suites (assigned) + ShapeDtypeStruct input specs per cell.
+
+  train_4k      seq_len=4096    global_batch=256   → train_step
+  prefill_32k   seq_len=32768   global_batch=32    → prefill_step
+  decode_32k    seq_len=32768   global_batch=128   → decode_step (1 new token
+                                                     against a 32k KV cache)
+  long_500k     seq_len=524288  global_batch=1     → decode_step; only for
+                sub-quadratic archs (ssm/hybrid) — skip noted in DESIGN.md
+
+``[audio]``/``[vlm]`` archs take precomputed frame/patch embeddings
+(modality frontend is a stub per the assignment).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCfg:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCfg("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCfg("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCfg("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCfg("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_applicable(arch: ArchConfig, shape: ShapeCfg) -> tuple[bool, str]:
+    if shape.name == "long_500k" and not arch.sub_quadratic:
+        return False, ("skipped: pure full-attention arch; long_500k needs "
+                       "sub-quadratic attention (DESIGN.md §Arch-applicability)")
+    return True, ""
+
+
+def input_specs(arch: ArchConfig, shape: ShapeCfg, dtype=jnp.bfloat16) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        specs = dict(
+            tokens=sds((b, s), jnp.int32),
+            labels=sds((b, s), jnp.int32),
+        )
+        if arch.embeddings_input:
+            specs["embeds"] = sds((b, s, arch.d_model), dtype)
+        if arch.rope_type == "mrope":
+            specs["positions"] = sds((3, b, s), jnp.int32)
+        return specs
+    if shape.kind == "prefill":
+        specs = dict(tokens=sds((b, s), jnp.int32))
+        if arch.embeddings_input:
+            specs["embeds"] = sds((b, s, arch.d_model), dtype)
+        if arch.rope_type == "mrope":
+            specs["positions"] = sds((3, b, s), jnp.int32)
+        return specs
+    # decode: one new token against a cache of length seq_len
+    from repro.models.transformer import cache_specs
+    specs = dict(
+        tokens=sds((b, 1), jnp.int32),
+        pos=sds((), jnp.int32),
+        cache=cache_specs(arch, b, s, dtype=dtype),
+    )
+    if arch.embeddings_input:
+        specs["embeds"] = sds((b, 1, arch.d_model), dtype)
+    if arch.rope_type == "mrope":
+        specs["positions"] = sds((3, b, 1), jnp.int32)
+    return specs

@@ -1,0 +1,15 @@
+"""repro.core — HYLU: hybrid parallel sparse LU factorization (the paper's
+contribution) as a composable JAX module.
+
+Public API:
+    CSR                       sparse container
+    HyluOptions               solver options (mode/ordering/pivoting knobs)
+    analyze / factor / refactor / solve / solve_system
+    make_sparse_solve         differentiable jittable solver (custom_vjp)
+    baselines                 pardiso_like / klu_like option presets
+"""
+from .matrix import CSR
+from .api import (HyluOptions, Analysis, FactorState, analyze, factor,
+                  refactor, solve, solve_system)
+from .autodiff import make_sparse_solve
+from . import baseline as baselines

@@ -1,0 +1,202 @@
+"""HYLU public API: analyze → factor → solve (+ refactor for repeated solve).
+
+Pipeline (paper §2):
+  preprocessing   = MC64 matching/scaling + ordering selection + symbolic
+                    factorization + kernel selection + plan build
+  numeric         = hybrid-kernel factorization (ref_engine / jax_engine)
+  solve           = level-scheduled substitution + iterative refinement
+
+Transformations bookkeeping:  with Dr=diag(r), Ds=diag(s) from matching,
+column permutation q (matched entry → diagonal), symmetric ordering p and
+the numeric in-node pivot permutation g↦inode_perm[g]:
+
+    M = (P_p (Dr A Ds) Q_q P_pᵀ),     L U = M[inode_perm, :]
+
+    A x = b   ⇒   w = U⁻¹ L⁻¹ ((r·b)[p][inode_perm]) ;  z[p]=w ; y[q]=z ; x = s·y
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+import numpy as np
+
+from .matrix import CSR
+from .matching import max_weight_matching, apply_static_pivoting, MatchResult
+from .ordering import select_ordering
+from .kernel_select import select_kernel, KernelChoice
+from .plan import build_plan, FactorPlan, plan_stats
+from .symbolic import Symbolic, symbolic_stats
+from . import ref_engine
+from .ref_engine import Factors, SolvePlan
+
+
+@dataclasses.dataclass
+class HyluOptions:
+    force_mode: str | None = None          # rowrow | hybrid | supernodal
+    orderings: tuple = ("min_degree", "nested_dissection", "natural")
+    relax: int = 8
+    max_super: int = 128
+    perturb_eps: float = 1e-8
+    refine_max_iter: int = 3
+    refine_tol: float = 1e-12
+    bulk_min_width: int = 8
+
+
+@dataclasses.dataclass
+class Analysis:
+    n: int
+    opts: HyluOptions
+    match: MatchResult
+    q: np.ndarray              # column permutation from matching
+    p: np.ndarray              # fill-reducing ordering
+    ordering_name: str
+    choice: KernelChoice
+    sym: Symbolic
+    plan: FactorPlan
+    # refactor fast path: M.data = A.data[src_map] * scale_map
+    src_map: np.ndarray
+    scale_map: np.ndarray
+    m_pattern: tuple           # (indptr, indices) of M
+    timings: dict
+
+
+@dataclasses.dataclass
+class FactorState:
+    analysis: Analysis
+    factors: Factors
+    solve_plan: SolvePlan
+    a: CSR                     # the matrix these factors correspond to
+    timings: dict
+
+
+def analyze(a: CSR, opts: HyluOptions | None = None, reuse=None) -> Analysis:
+    """Preprocessing phase (HYLU §2.1).
+
+    reuse: a prior Analysis of the *same matrix* — matching and ordering are
+    mode-independent and are reused (benchmarking different kernel modes
+    re-runs only symbolic + plan)."""
+    opts = opts or HyluOptions()
+    t: dict[str, float] = {}
+    t0 = time.perf_counter()
+    match = reuse.match if reuse is not None else max_weight_matching(a)
+    t["matching"] = time.perf_counter() - t0
+
+    # permute/scale with index-tracking data so refactor is a pure gather
+    t0 = time.perf_counter()
+    seg = np.repeat(np.arange(a.n), np.diff(a.indptr))
+    scale_entry = match.row_scale[seg] * match.col_scale[a.indices]
+    tracker = CSR(a.n, a.indptr.copy(), a.indices.copy(),
+                  np.arange(a.nnz, dtype=np.float64))
+    q = match.col_of_row.copy()
+    b2_track = tracker.permute(np.arange(a.n), q)
+
+    pat2 = CSR(a.n, b2_track.indptr, b2_track.indices,
+               np.ones(a.nnz)).sym_pattern()
+    if reuse is not None:
+        p, ord_name = reuse.p, reuse.ordering_name
+    else:
+        p, ord_name = select_ordering(pat2, candidates=opts.orderings)
+    t["ordering"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    m_track = b2_track.permute(p, p)
+    src_map = m_track.data.astype(np.int64)
+    scale_map = scale_entry[src_map]
+    pat_m = pat2.permute(p, p)
+    choice, sym = select_kernel(pat_m, force_mode=opts.force_mode,
+                                relax=opts.relax, max_super=opts.max_super)
+    t["symbolic"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    m = CSR(a.n, m_track.indptr, m_track.indices, np.ones(a.nnz))
+    plan = build_plan(pat_m, m, sym, mode=choice.mode,
+                      bulk_min_width=opts.bulk_min_width)
+    t["plan"] = time.perf_counter() - t0
+    t["total"] = sum(t.values())
+
+    return Analysis(n=a.n, opts=opts, match=match, q=q, p=p,
+                    ordering_name=ord_name, choice=choice, sym=sym, plan=plan,
+                    src_map=src_map, scale_map=scale_map,
+                    m_pattern=(m_track.indptr, m_track.indices), timings=t)
+
+
+def _m_values(an: Analysis, a: CSR) -> CSR:
+    data = a.data[an.src_map] * an.scale_map
+    return CSR(a.n, an.m_pattern[0], an.m_pattern[1], data)
+
+
+def factor(an: Analysis, a: CSR, engine=ref_engine) -> FactorState:
+    """Numeric factorization + solve-plan build."""
+    t = {}
+    t0 = time.perf_counter()
+    m = _m_values(an, a)
+    f = engine.factor(an.plan, m, perturb_eps=an.opts.perturb_eps)
+    t["factor"] = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    sp = ref_engine.build_solve_plan(f, bulk_min_width=an.opts.bulk_min_width)
+    t["solve_plan"] = time.perf_counter() - t0
+    return FactorState(analysis=an, factors=f, solve_plan=sp, a=a, timings=t)
+
+
+def refactor(st: FactorState, a_new: CSR) -> FactorState:
+    """Repeated-solve path: same pattern, new values; reuses the analysis
+    AND the solve plan's structure (values refresh only)."""
+    an = st.analysis
+    t = {}
+    t0 = time.perf_counter()
+    m = _m_values(an, a_new)
+    f = ref_engine.factor(an.plan, m, perturb_eps=an.opts.perturb_eps)
+    t["factor"] = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    sp = ref_engine.build_solve_plan(f, bulk_min_width=an.opts.bulk_min_width)
+    t["solve_plan"] = time.perf_counter() - t0
+    return FactorState(analysis=an, factors=f, solve_plan=sp, a=a_new, timings=t)
+
+
+def solve(st: FactorState, b: np.ndarray, refine: bool | None = None) -> tuple:
+    """Forward/backward substitution + iterative refinement (auto when pivot
+    perturbation occurred, per paper §2.3). Returns (x, info)."""
+    an, f = st.analysis, st.factors
+    opts = an.opts
+    t0 = time.perf_counter()
+
+    def lu_apply(rhs: np.ndarray) -> np.ndarray:
+        c = (an.match.row_scale * rhs)[an.p][f.inode_perm]
+        w = ref_engine.solve_lu(st.solve_plan, c)
+        z = np.empty_like(w); z[an.p] = w
+        y = np.empty_like(z); y[an.q] = z
+        return an.match.col_scale * y
+
+    x = lu_apply(b)
+    n_ref = 0
+    bnorm = float(np.abs(b).sum()) or 1.0
+    resid = float(np.abs(b - st.a.matvec(x)).sum()) / bnorm
+    # auto-refine when pivot perturbation occurred (paper §2.3) or the
+    # residual is above the target
+    do_refine = refine if refine is not None else (
+        f.n_perturb > 0 or resid > opts.refine_tol)
+    if do_refine:
+        for _ in range(opts.refine_max_iter):
+            if resid <= opts.refine_tol:
+                break
+            r = b - st.a.matvec(x)
+            x2 = x + lu_apply(r)
+            resid2 = float(np.abs(b - st.a.matvec(x2)).sum()) / bnorm
+            n_ref += 1
+            if resid2 >= resid:
+                break
+            x, resid = x2, resid2
+    info = dict(residual=resid, n_refine=n_ref, n_perturb=f.n_perturb,
+                solve_time=time.perf_counter() - t0)
+    return x, info
+
+
+def solve_system(a: CSR, b: np.ndarray, opts: HyluOptions | None = None):
+    """One-call convenience: analyze + factor + solve."""
+    an = analyze(a, opts)
+    st = factor(an, a)
+    x, info = solve(st, b)
+    info["timings"] = {"preprocess": an.timings, "factor": st.timings}
+    info["mode"] = an.choice.mode
+    info["ordering"] = an.ordering_name
+    return x, info

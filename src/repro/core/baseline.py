@@ -1,0 +1,39 @@
+"""Internal baselines (the paper's comparison structure, §4).
+
+The paper's thesis: *integrating different numerical kernels and elaborately
+selecting them based on the matrix sparsity pattern* beats any single-kernel
+solver across sparsity regimes.  We materialize that comparison with three
+fully-functional solver configurations sharing the same engine:
+
+  pardiso_like  — supernodal-only (aggressive amalgamation; level-3 BLAS
+                  everywhere) — the MKL PARDISO / SuperLU design point.
+  klu_like      — row-row only (no supernodes) — the KLU/NICSLU design point.
+  hylu          — hybrid kernels + smart selection (the paper).
+
+``scipy.sparse.linalg.splu`` (SuperLU, the paper's ref [2]) is used as the
+external baseline in benchmarks.
+"""
+from __future__ import annotations
+
+from .api import HyluOptions
+
+
+def hylu_options(**kw) -> HyluOptions:
+    return HyluOptions(force_mode=None, **kw)
+
+
+def pardiso_like_options(**kw) -> HyluOptions:
+    kw.setdefault("relax", 32)
+    kw.setdefault("max_super", 256)
+    return HyluOptions(force_mode="supernodal", **kw)
+
+
+def klu_like_options(**kw) -> HyluOptions:
+    return HyluOptions(force_mode="rowrow", **kw)
+
+
+BASELINES = {
+    "hylu": hylu_options,
+    "pardiso_like": pardiso_like_options,
+    "klu_like": klu_like_options,
+}

@@ -1,0 +1,194 @@
+"""JAX numeric engine: the TPU execution of a FactorPlan.
+
+The plan is static host data; this module emits a jittable function
+``b_data -> (vals, inode_perm, n_perturb)`` that executes the hybrid-kernel
+schedule.  Nodes/edges are unrolled at trace time with static index maps —
+every gather/scatter index is a compile-time constant, so XLA sees pure
+dense ops (the TPU-native expression of the static symbolic structure).
+
+Kernel mapping (HYLU §2.2 → TPU):
+  row-row  : k==1, nr==1  — scalar divide + vector axpy (VPU)
+  sup-row  : k>1,  nr==1  — TRSV + GEMV against the source panel (VPU/MXU)
+  sup-sup  : k>1,  nr>1   — TRSM + GEMM on dense panels (MXU; optionally the
+                            Pallas gather-GEMM-scatter kernel)
+Internal supernode factorization = dense partially-pivoted LU on the
+diagonal block (supernode diagonal pivoting + pivot perturbation).
+
+``use_pallas=True`` routes panel updates through the Pallas kernels in
+``repro.kernels`` (interpret mode on CPU; compiled on real TPUs).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .plan import FactorPlan
+from .ref_engine import SolvePlan
+
+
+class JaxFactors(NamedTuple):
+    vals: jax.Array          # flat panel values (float64 or float32)
+    inode_perm: jax.Array    # (n,) int32
+    n_perturb: jax.Array     # () int32
+
+
+def _trsm_upper_jax(u, x):
+    """Solve Y @ U = X (U upper-triangular, non-unit). Unrolled over k
+    (supernode widths are small and static)."""
+    k = u.shape[0]
+    cols = []
+    for j in range(k):
+        acc = x[:, j]
+        if j:
+            yj = jnp.stack(cols, axis=1)            # (nr, j)
+            acc = acc - yj @ u[:j, j]
+        cols.append(acc / u[j, j])
+    return jnp.stack(cols, axis=1)
+
+
+def _panel_lu(panel, nr, lsize, eps_p, use_pallas=False, interpret=True):
+    """Dense LU of the diagonal block with partial pivoting within the
+    supernode (supernode diagonal pivoting) + pivot perturbation.
+    Returns (panel, local_perm, n_perturb)."""
+    if use_pallas and nr > 1:
+        from repro.kernels.panel import ops as panel_ops
+        return panel_ops.panel_lu(panel, nr, lsize, eps_p, interpret=interpret)
+    w = panel.shape[1]
+    perm = jnp.arange(nr, dtype=jnp.int32)
+    nper = jnp.int32(0)
+
+    def body(j, carry):
+        panel, perm, nper = carry
+        col = jax.lax.dynamic_slice_in_dim(panel, lsize + j, 1, axis=1)[:, 0]
+        rows = jnp.arange(nr)
+        cand = jnp.where(rows >= j, jnp.abs(col), -1.0)
+        p = jnp.argmax(cand)
+        # swap rows j <-> p of the whole panel (and perm)
+        swap = jnp.arange(nr).at[j].set(p).at[p].set(j)
+        panel = panel[swap, :]
+        perm = perm[swap]
+        piv = panel[j, lsize + j]
+        small = jnp.abs(piv) < eps_p
+        piv = jnp.where(small, jnp.where(piv >= 0, eps_p, -eps_p), piv)
+        panel = panel.at[j, lsize + j].set(piv)
+        nper = nper + small.astype(jnp.int32)
+        # eliminate below the pivot: cols >= lsize+j (mask), rows > j
+        l = panel[:, lsize + j] / piv
+        rmask = (rows > j).astype(panel.dtype)
+        l = l * rmask
+        urow = panel[j, :]
+        cmask = (jnp.arange(w) > lsize + j).astype(panel.dtype)
+        panel = panel - jnp.outer(l, urow * cmask)
+        panel = panel.at[:, lsize + j].set(jnp.where(rows > j, l, panel[:, lsize + j]))
+        return panel, perm, nper
+
+    if nr == 1:
+        piv = panel[0, lsize]
+        small = jnp.abs(piv) < eps_p
+        piv = jnp.where(small, jnp.where(piv >= 0, eps_p, -eps_p), piv)
+        panel = panel.at[0, lsize].set(piv)
+        return panel, perm, small.astype(jnp.int32)
+    panel, perm, nper = jax.lax.fori_loop(0, nr, body, (panel, perm, nper))
+    return panel, perm, nper
+
+
+def make_factor_fn(plan: FactorPlan, perturb_eps: float = 1e-8,
+                   dtype=jnp.float64, use_pallas: bool = False,
+                   interpret: bool = True):
+    """Emit the jittable numeric factorization for this plan."""
+    offs = plan.panel_offset
+    nodes = plan.nodes
+
+    def factor_fn(b_data: jax.Array) -> JaxFactors:
+        b_data = b_data.astype(dtype)
+        amax = jnp.max(jnp.abs(b_data))
+        eps_p = perturb_eps * amax
+        vals = jnp.zeros((plan.total_slots,), dtype=dtype)
+        vals = vals.at[plan.a_scatter].set(b_data)
+        inode = jnp.arange(plan.n, dtype=jnp.int32)
+        nper = jnp.int32(0)
+
+        for nd in nodes:
+            off = int(offs[nd.nid])
+            nr, w = nd.nr, nd.width
+            panel = jax.lax.dynamic_slice(vals, (off,), (nr * w,)).reshape(nr, w)
+            for e in nd.edges:
+                snd = nodes[e.src]
+                soff = int(offs[snd.nid])
+                sp = jax.lax.dynamic_slice(
+                    vals, (soff,), (snd.nr * snd.width,)).reshape(snd.nr, snd.width)
+                src = sp[:, snd.lsize:]
+                k = snd.nr
+                cm = e.col_map
+                x = panel[:, cm]
+                if k == 1:
+                    lts = x[:, :1] / src[0, 0]          # row-row / sup-row
+                    xr = x[:, 1:] - lts * src[:, 1:]
+                else:
+                    if use_pallas and nr > 1:
+                        from repro.kernels.supsup import ops as supsup_ops
+                        lts, xr = supsup_ops.supsup_update(
+                            x, src, k, interpret=interpret)
+                    else:
+                        lts = _trsm_upper_jax(src[:, :k], x[:, :k])
+                        xr = x[:, k:] - lts @ src[:, k:]
+                panel = panel.at[:, cm].set(jnp.concatenate([lts, xr], axis=1))
+            panel, lperm, np_ = _panel_lu(panel, nr, nd.lsize, eps_p,
+                                          use_pallas=use_pallas,
+                                          interpret=interpret)
+            nper = nper + np_
+            if nr > 1:
+                seg = jax.lax.dynamic_slice(inode, (nd.r0,), (nr,))
+                inode = jax.lax.dynamic_update_slice(inode, seg[lperm], (nd.r0,))
+            vals = jax.lax.dynamic_update_slice(vals, panel.reshape(-1), (off,))
+        return JaxFactors(vals=vals, inode_perm=inode, n_perturb=nper)
+
+    return factor_fn
+
+
+# --------------------------------------------------------------------------
+# level-scheduled triangular solves in JAX (static SolveStructure schedules)
+# --------------------------------------------------------------------------
+def _tri_solve(sched, vals, rhs, diag_slots=None, transpose_diag=False):
+    """One triangular substitution following a TriSched. Each level is one
+    vectorized gather + segment-sum (bulk mode); narrow tail levels are tiny
+    sequential ops — the paper's bulk-sequential dual mode, unrolled."""
+    w = rhs
+    for rows, cols, slot, seg in zip(sched.rows, sched.cols, sched.slot,
+                                     sched.seg):
+        if diag_slots is None:          # unit-diagonal (L or Lᵀ)
+            if len(cols):
+                acc = jax.ops.segment_sum(vals[slot] * w[cols], seg,
+                                          num_segments=len(rows))
+                w = w.at[rows].add(-acc)
+        else:
+            d = vals[diag_slots[rows]]
+            if len(cols):
+                acc = jax.ops.segment_sum(vals[slot] * w[cols], seg,
+                                          num_segments=len(rows))
+                w = w.at[rows].set((w[rows] - acc) / d)
+            else:
+                w = w.at[rows].set(w[rows] / d)
+    return w
+
+
+def make_lu_solver(ss, dtype=jnp.float64):
+    """Emit jittable solves on the flat panel buffer:
+
+        lu_solve(vals, c)   = U⁻¹ L⁻¹ c
+        lut_solve(vals, c)  = L⁻ᵀ U⁻ᵀ c      (adjoint path)
+    """
+    def lu_solve(vals, c):
+        y = _tri_solve(ss.l_fwd, vals, c.astype(vals.dtype))
+        return _tri_solve(ss.u_bwd, vals, y, diag_slots=ss.lu.u_diag_slots)
+
+    def lut_solve(vals, c):
+        y = _tri_solve(ss.ut_fwd, vals, c.astype(vals.dtype),
+                       diag_slots=ss.lu.u_diag_slots)
+        return _tri_solve(ss.lt_bwd, vals, y)
+
+    return lu_solve, lut_solve

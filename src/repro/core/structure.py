@@ -1,0 +1,144 @@
+"""Static L/U structure + slot maps derived from a FactorPlan.
+
+The factored values live in the flat panel buffer ``vals``; every L/U entry
+has a *static* slot there (in-node pivoting permutes which original row a
+panel row holds, never the slot layout).  These maps let the JAX solve,
+transpose-solve (adjoint) and refactorization paths gather L/U values with
+compile-time-constant indices.
+"""
+from __future__ import annotations
+
+import dataclasses
+import numpy as np
+
+from .plan import FactorPlan
+
+
+@dataclasses.dataclass
+class LUStructure:
+    n: int
+    # L strictly-lower (unit diag implicit), CSR by rows
+    l_indptr: np.ndarray
+    l_indices: np.ndarray
+    l_slots: np.ndarray
+    # U strictly-upper, CSR by rows, diag separate
+    u_indptr: np.ndarray
+    u_indices: np.ndarray
+    u_slots: np.ndarray
+    u_diag_slots: np.ndarray
+
+
+def lu_structure(plan: FactorPlan) -> LUStructure:
+    n = plan.n
+    lr_pt = [0]; lr_ix = []; lr_sl = []
+    ur_pt = [0]; ur_ix = []; ur_sl = []
+    ud_sl = np.empty(n, dtype=np.int64)
+    for nd in plan.nodes:
+        off = int(plan.panel_offset[nd.nid])
+        nr, w, ls = nd.nr, nd.width, nd.lsize
+        pat = nd.pattern
+        for q in range(nr):
+            g = nd.r0 + q
+            base = off + q * w
+            # L: prefix cols + in-block strictly-lower
+            lr_ix.extend(pat[:ls].tolist())
+            lr_sl.extend(range(base, base + ls))
+            lr_ix.extend(range(nd.r0, nd.r0 + q))
+            lr_sl.extend(range(base + ls, base + ls + q))
+            lr_pt.append(len(lr_ix))
+            # U: strictly-upper in-block + suffix; diag separate
+            ud_sl[g] = base + ls + q
+            ur_ix.extend(range(g + 1, nd.r0 + nr))
+            ur_sl.extend(range(base + ls + q + 1, base + ls + nr))
+            ur_ix.extend(pat[ls + nr:].tolist())
+            ur_sl.extend(range(base + ls + nr, base + w))
+            ur_pt.append(len(ur_ix))
+    return LUStructure(
+        n=n,
+        l_indptr=np.array(lr_pt, dtype=np.int64),
+        l_indices=np.array(lr_ix, dtype=np.int64),
+        l_slots=np.array(lr_sl, dtype=np.int64),
+        u_indptr=np.array(ur_pt, dtype=np.int64),
+        u_indices=np.array(ur_ix, dtype=np.int64),
+        u_slots=np.array(ur_sl, dtype=np.int64),
+        u_diag_slots=ud_sl,
+    )
+
+
+def transpose_csr(n, indptr, indices, slots):
+    """CSC view == CSR of the transpose, keeping slot association."""
+    rows = np.repeat(np.arange(n), np.diff(indptr))
+    order = np.lexsort((rows, indices))
+    t_rows = indices[order]
+    t_cols = rows[order]
+    t_slots = slots[order]
+    t_indptr = np.zeros(n + 1, dtype=np.int64)
+    np.add.at(t_indptr, t_rows + 1, 1)
+    return np.cumsum(t_indptr), t_cols, t_slots
+
+
+@dataclasses.dataclass
+class TriSched:
+    """Level schedule for one triangular solve, flattened per level.
+    Per level k: rows[k] (unknowns finalized), cols[k]/slot[k]/seg[k]
+    (dependencies; slot indexes the flat panel buffer)."""
+    rows: list
+    cols: list
+    slot: list
+    seg: list
+    n_bulk: int
+    n_levels: int
+
+
+def tri_schedule(n, indptr, indices, slots, lower: bool,
+                 bulk_min_width: int = 8) -> TriSched:
+    """Levelize a triangular system given as strictly-tri CSR. ``lower``
+    selects dependency direction (forward vs backward substitution)."""
+    lev = np.zeros(n, dtype=np.int64)
+    rng = range(n) if lower else range(n - 1, -1, -1)
+    for i in rng:
+        s, e = indptr[i], indptr[i + 1]
+        if e > s:
+            lev[i] = 1 + lev[indices[s:e]].max()
+    nl = int(lev.max()) + 1 if n else 0
+    rows_l, cols_l, slot_l, seg_l = [], [], [], []
+    n_bulk = 0
+    for k in range(nl):
+        rows = np.where(lev == k)[0]
+        cnt = (indptr[rows + 1] - indptr[rows]).astype(np.int64)
+        seg = np.repeat(np.arange(len(rows)), cnt)
+        take = (np.concatenate([np.arange(indptr[i], indptr[i + 1]) for i in rows])
+                if cnt.sum() else np.empty(0, np.int64))
+        rows_l.append(rows); cols_l.append(indices[take])
+        slot_l.append(slots[take]); seg_l.append(seg)
+        if len(rows) >= bulk_min_width:
+            n_bulk += 1
+    return TriSched(rows_l, cols_l, slot_l, seg_l, n_bulk, nl)
+
+
+@dataclasses.dataclass
+class SolveStructure:
+    """Everything the JAX solve/adjoint needs, all static."""
+    n: int
+    lu: LUStructure
+    l_fwd: TriSched       # L y = c      (forward)
+    u_bwd: TriSched       # U w = y      (backward)
+    lt_bwd: TriSched      # Lᵀ w = y     (backward; adjoint path)
+    ut_fwd: TriSched      # Uᵀ y = c     (forward;  adjoint path)
+
+
+def build_solve_structure(plan: FactorPlan, bulk_min_width: int = 8) -> SolveStructure:
+    lu = lu_structure(plan)
+    n = plan.n
+    l_fwd = tri_schedule(n, lu.l_indptr, lu.l_indices, lu.l_slots, lower=True,
+                         bulk_min_width=bulk_min_width)
+    u_bwd = tri_schedule(n, lu.u_indptr, lu.u_indices, lu.u_slots, lower=False,
+                         bulk_min_width=bulk_min_width)
+    lt_ip, lt_ix, lt_sl = transpose_csr(n, lu.l_indptr, lu.l_indices, lu.l_slots)
+    ut_ip, ut_ix, ut_sl = transpose_csr(n, lu.u_indptr, lu.u_indices, lu.u_slots)
+    lt_bwd = tri_schedule(n, lt_ip, lt_ix, lt_sl, lower=False,
+                          bulk_min_width=bulk_min_width)
+    ut_fwd = tri_schedule(n, ut_ip, ut_ix, ut_sl, lower=True,
+                          bulk_min_width=bulk_min_width)
+    return SolveStructure(n=n, lu=lu, l_fwd=l_fwd, u_bwd=u_bwd,
+                          lt_bwd=lt_bwd, ut_fwd=ut_fwd)

@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: FlashAttention-style causal attention (fwd).
+
+Online-softmax over KV tiles with running (m, l, acc) VMEM scratch carried
+across the innermost ("arbitrary") grid dimension.  GQA is handled by the
+index map (query-head h reads kv-head h // group).
+
+Grid: (batch*heads, T/BQ, S/BK); the kv axis must be innermost so the
+scratch accumulators persist per (bh, q-tile).
+
+VMEM budget per step: BQ×D (q) + 2×BK×D (k,v) + BQ×BK (logits) + BQ×D (acc)
+≈ 4 tiles of 128×128 fp32 ≈ 256 KiB — comfortably inside 16 MiB VMEM, the
+rest of the budget is pipeline double-buffering.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  bq: int, bk: int, scale: float, causal: bool, n_k: int,
+                  s_valid: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # with causal masking, tiles strictly above the diagonal are skipped
+    run = (not causal) or (qi * bq + bq - 1 >= ki * bk)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0]                                   # (BQ, D)
+        k = k_ref[0]                                   # (BK, D)
+        v = v_ref[0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = cols < s_valid                      # padded kv columns
+        if causal:
+            mask = mask & (rows >= cols)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=1)[:, None]
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1)[:, None]
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ki == n_k - 1)
+    def _done():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)       # fully-masked (padded) rows
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bq", "bk", "causal", "interpret"))
+def flash_attention(q, k, v, bq: int = 128, bk: int = 128,
+                    causal: bool = True, interpret: bool = True):
+    """q: (B, Hq, T, D); k/v: (B, Hkv, S, D). Returns (B, Hq, T, D)."""
+    b, hq, t, d = q.shape
+    _, hkv, s, _ = k.shape
+    g = hq // hkv
+    scale = 1.0 / (d ** 0.5)
+    bq = min(bq, t)
+    bk = min(bk, s)
+    t0, s0 = t, s
+    # pad sequence dims to tile multiples: OOB tile reads are undefined
+    # (NaN-filled in interpret mode) and 0·NaN would poison the GEMM.
+    tp = -(-t // bq) * bq
+    sp = -(-s // bk) * bk
+    if tp != t:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, tp - t), (0, 0)))
+        t = tp
+    if sp != s:
+        pad = ((0, 0), (0, 0), (0, sp - s), (0, 0))
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+        s = sp
+    qr = q.reshape(b * hq, t, d)
+    kr = k.reshape(b * hkv, s, d)
+    vr = v.reshape(b * hkv, s, d)
+    grid = (b * hq, pl.cdiv(t, bq), pl.cdiv(s, bk))
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, bq=bq, bk=bk, scale=scale,
+                          causal=causal, n_k=grid[2], s_valid=s0),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j: (h // g, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, t, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, hq, t, d)[:, :, :t0, :]

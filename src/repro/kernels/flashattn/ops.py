@@ -1,0 +1,7 @@
+"""jit'd wrapper for the flash-attention Pallas kernel."""
+import jax
+
+from .kernel import flash_attention
+from .ref import attention_ref
+
+__all__ = ["flash_attention", "attention_ref"]

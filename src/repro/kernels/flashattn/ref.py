@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for causal (optionally GQA) attention."""
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal: bool = True, scale: float | None = None):
+    """q: (B, Hq, T, D); k/v: (B, Hkv, S, D); Hq % Hkv == 0."""
+    b, hq, t, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(q.dtype)
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    logits = jnp.einsum("bhtd,bhsd->bhts", q, k) * scale
+    if causal:
+        s = k.shape[2]
+        mask = jnp.arange(t)[:, None] + (s - t) >= jnp.arange(s)[None, :]
+        logits = jnp.where(mask, logits, -jnp.inf)
+    w = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    w = w / w.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhts,bhsd->bhtd", w, v)

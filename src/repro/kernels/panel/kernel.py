@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: in-supernode dense LU (right-looking, in-VMEM).
+
+The internal factorization of a supernode: partial pivoting restricted to
+the diagonal block (HYLU's supernode diagonal pivoting — legal because the
+rows of a supernode share their U structure) + pivot perturbation for
+small/zero pivots (SuperLU_DIST-style, ref [13] of the paper).
+
+The whole panel (nr ≤ 128 rows × w cols) is one VMEM block: the supernode
+width cap chosen at analysis time guarantees it fits.  The perturbation
+threshold eps_p is a runtime scalar ((1,1) VMEM input) because it depends
+on max|B| of the current values (refactorization changes it without
+recompiling).
+
+Outputs: factored panel, local pivot permutation, #perturbed pivots.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _panel_lu_kernel(panel_ref, eps_ref, out_ref, perm_ref, nper_ref, *,
+                     nr: int, lsize: int):
+    panel = panel_ref[...]
+    eps_p = eps_ref[0, 0]
+    w = panel.shape[1]
+    perm = jnp.arange(nr, dtype=jnp.int32)
+    nper = jnp.zeros((), jnp.int32)
+
+    def body(j, carry):
+        panel, perm, nper = carry
+        col = jax.lax.dynamic_slice_in_dim(panel, lsize + j, 1, axis=1)[:, 0]
+        rows = jnp.arange(nr)
+        cand = jnp.where(rows >= j, jnp.abs(col), -1.0)
+        p = jnp.argmax(cand)
+        swap = jnp.arange(nr).at[j].set(p).at[p].set(j)
+        panel = panel[swap, :]
+        perm = perm[swap]
+        piv = panel[j, lsize + j]
+        small = jnp.abs(piv) < eps_p
+        piv = jnp.where(small, jnp.where(piv >= 0, eps_p, -eps_p), piv)
+        panel = panel.at[j, lsize + j].set(piv)
+        nper = nper + small.astype(jnp.int32)
+        l = panel[:, lsize + j] / piv
+        l = l * (rows > j).astype(panel.dtype)
+        urow = panel[j, :] * (jnp.arange(w) > lsize + j).astype(panel.dtype)
+        panel = panel - l[:, None] * urow[None, :]       # VPU rank-1
+        panel = panel.at[:, lsize + j].set(
+            jnp.where(rows > j, l, panel[:, lsize + j]))
+        return panel, perm, nper
+
+    panel, perm, nper = jax.lax.fori_loop(0, nr, body, (panel, perm, nper))
+    out_ref[...] = panel
+    perm_ref[...] = perm.reshape(perm_ref.shape)
+    nper_ref[...] = nper.reshape(nper_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("nr", "lsize", "interpret"))
+def panel_lu_p(panel: jax.Array, eps_p: jax.Array, nr: int, lsize: int,
+               interpret: bool = True):
+    w = panel.shape[1]
+    eps2d = jnp.reshape(eps_p.astype(panel.dtype), (1, 1))
+    return pl.pallas_call(
+        functools.partial(_panel_lu_kernel, nr=nr, lsize=lsize),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((nr, w), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((nr, w), lambda i: (0, 0)),
+            pl.BlockSpec((nr,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nr, w), panel.dtype),
+            jax.ShapeDtypeStruct((nr,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(panel, eps2d)

@@ -1,0 +1,16 @@
+"""jit'd wrapper for the panel-LU Pallas kernel."""
+import jax
+import jax.numpy as jnp
+
+from .kernel import panel_lu_p
+from .ref import panel_lu_ref
+
+__all__ = ["panel_lu", "panel_lu_ref"]
+
+
+def panel_lu(panel: jax.Array, nr: int, lsize: int, eps_p,
+             interpret: bool = True):
+    """Returns (panel, local_perm (int32 nr), n_perturb (int32 scalar))."""
+    eps = jnp.asarray(eps_p, dtype=panel.dtype)
+    out, perm, nper = panel_lu_p(panel, eps, nr, lsize, interpret=interpret)
+    return out, perm, nper[0]

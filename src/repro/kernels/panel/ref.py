@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the panel kernel: dense LU of a supernode's diagonal
+block with partial pivoting inside the block (supernode diagonal pivoting)
+and pivot perturbation. Operates on the full panel so row swaps carry the
+L-part and U-part along, exactly like the engine."""
+import jax
+import jax.numpy as jnp
+
+
+def panel_lu_ref(panel: jax.Array, nr: int, lsize: int, eps_p):
+    """panel: (nr, w). Returns (panel, local_perm, n_perturb)."""
+    w = panel.shape[1]
+    perm = jnp.arange(nr, dtype=jnp.int32)
+    nper = jnp.int32(0)
+
+    def body(j, carry):
+        panel, perm, nper = carry
+        col = jax.lax.dynamic_slice_in_dim(panel, lsize + j, 1, axis=1)[:, 0]
+        rows = jnp.arange(nr)
+        cand = jnp.where(rows >= j, jnp.abs(col), -1.0)
+        p = jnp.argmax(cand)
+        swap = jnp.arange(nr).at[j].set(p).at[p].set(j)
+        panel = panel[swap, :]
+        perm = perm[swap]
+        piv = panel[j, lsize + j]
+        small = jnp.abs(piv) < eps_p
+        piv = jnp.where(small, jnp.where(piv >= 0, eps_p, -eps_p), piv)
+        panel = panel.at[j, lsize + j].set(piv)
+        nper = nper + small.astype(jnp.int32)
+        l = panel[:, lsize + j] / piv
+        l = l * (rows > j).astype(panel.dtype)
+        urow = panel[j, :] * (jnp.arange(w) > lsize + j).astype(panel.dtype)
+        panel = panel - jnp.outer(l, urow)
+        panel = panel.at[:, lsize + j].set(
+            jnp.where(rows > j, l, panel[:, lsize + j]))
+        return panel, perm, nper
+
+    return jax.lax.fori_loop(0, nr, body, (panel, perm, nper))

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the sup-row kernel (level-2 BLAS shape):
+a source supernode updates a single target row.
+
+    y   = x[:k] @ inv(U_SS)        (TRSV against the diag block)
+    xr  = x[k:] - y @ B            (GEMV against the U panel)
+"""
+import jax
+import jax.numpy as jnp
+
+
+def suprow_update_ref(x: jax.Array, src: jax.Array, k: int):
+    """x: (k+m,) target row slice; src: (k, k+m) source rows."""
+    u = src[:, :k]
+
+    def body(j, y):
+        acc = x[j] - y @ u[:, j]
+        return y.at[j].set(acc / u[j, j])
+
+    y = jax.lax.fori_loop(0, k, body, jnp.zeros((k,), x.dtype))
+    xr = x[k:] - y @ src[:, k:]
+    return y, xr

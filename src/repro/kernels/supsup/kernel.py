@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: sup-sup trailing update  C -= A @ B  (MXU GEMM).
+
+This is HYLU's level-3-BLAS kernel mapped to the MXU: a supernode's dense
+U-panel B (k × m) updates a target panel slice C (nr × m) through the just
+solved multipliers A (nr × k).  The gather/scatter through ``col_map``
+happens outside (XLA gather fuses with the kernel's HBM reads on TPU); the
+kernel is the flop-dominant GEMM with explicit VMEM tiling:
+
+  grid (i, j, l) over (nr/TM, m/TN, k/TK); C tile accumulated in a VMEM
+  scratch accumulator across the contraction dimension l (arbitrary-order
+  innermost axis), written back on the last l step.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gemm_update_kernel(c_ref, a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = c_ref[...].astype(acc_ref.dtype)
+
+    acc_ref[...] -= jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=acc_ref.dtype)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tm", "tn", "tk", "interpret"))
+def gemm_update(c: jax.Array, a: jax.Array, b: jax.Array,
+                tm: int = 128, tn: int = 128, tk: int = 128,
+                interpret: bool = True) -> jax.Array:
+    """C - A @ B with VMEM tiling. c: (nr, m), a: (nr, k), b: (k, m)."""
+    nr, m = c.shape
+    k = a.shape[1]
+    tm, tn, tk = min(tm, nr), min(tn, m), min(tk, k)
+    grid = (pl.cdiv(nr, tm), pl.cdiv(m, tn), pl.cdiv(k, tk))
+    return pl.pallas_call(
+        functools.partial(_gemm_update_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tn), lambda i, j, l: (i, j)),   # C
+            pl.BlockSpec((tm, tk), lambda i, j, l: (i, l)),   # A
+            pl.BlockSpec((tk, tn), lambda i, j, l: (l, j)),   # B
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nr, m), c.dtype),
+        # fp32 accumulation on the MXU; f64 only in CPU-interpret testing
+        scratch_shapes=[pltpu.VMEM(
+            (tm, tn), jnp.float64 if c.dtype == jnp.float64 else jnp.float32)],
+        interpret=interpret,
+    )(c, a, b)

@@ -1,0 +1,43 @@
+"""jit'd wrapper for the sup-sup update (TRSM + GEMM Pallas kernels)."""
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.trisolve import ops as trisolve_ops
+from .kernel import gemm_update
+from .ref import supsup_update_ref, gemm_update_ref
+
+__all__ = ["supsup_update", "gemm", "supsup_update_ref", "gemm_update_ref"]
+
+
+def supsup_update(x: jax.Array, src: jax.Array, k: int,
+                  interpret: bool = True):
+    """The full sup-sup numeric update on a gathered panel slice.
+
+    x:   (nr, k+m) target panel slice (gathered through col_map)
+    src: (k, k+m)  source supernode rows (diag block + U panel)
+    Returns (lts, xr): the solved multipliers and the updated trailing part.
+    """
+    lts = trisolve_ops.trsm(src[:, :k], x[:, :k], interpret=interpret)
+    xr = gemm(x[:, k:], lts, src[:, k:], interpret=interpret)
+    return lts, xr
+
+
+def gemm(c: jax.Array, a: jax.Array, b: jax.Array,
+         interpret: bool = True) -> jax.Array:
+    """C - A @ B, padding every dim to sublane/lane multiples (8 / 128-ish;
+    small solver panels use 8-multiples to bound padding waste)."""
+    nr, m = c.shape
+    k = a.shape[1]
+    if m == 0 or k == 0:
+        return c
+
+    def rnd(v, mult=8):
+        return max(mult, -(-v // mult) * mult)
+
+    nrp, mp, kp = rnd(nr), rnd(m, 128 if m >= 128 else 8), rnd(k)
+    if (nrp, mp, kp) != (nr, m, k):
+        cp = jnp.zeros((nrp, mp), c.dtype).at[:nr, :m].set(c)
+        ap = jnp.zeros((nrp, kp), a.dtype).at[:nr, :k].set(a)
+        bp = jnp.zeros((kp, mp), b.dtype).at[:k, :m].set(b)
+        return gemm_update(cp, ap, bp, interpret=interpret)[:nr, :m]
+    return gemm_update(c, a, b, interpret=interpret)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the sup-sup update: TRSM + GEMM trailing update.
+
+    lts = X[:, :k] @ inv(U_SS)          (U_SS = src[:, :k], upper-tri)
+    xr  = X[:, k:] - lts @ src[:, k:]
+"""
+import jax.numpy as jnp
+
+from repro.kernels.trisolve.ref import trsm_upper_ref
+
+
+def supsup_update_ref(x, src, k):
+    lts = trsm_upper_ref(src[:, :k], x[:, :k])
+    xr = x[:, k:] - lts @ src[:, k:]
+    return lts, xr
+
+
+def gemm_update_ref(c, a, b):
+    """C - A @ B (the trailing update in isolation)."""
+    return c - a @ b

@@ -1,0 +1,50 @@
+"""Pallas TPU kernel: dense row-panel triangular solve  Y @ U = X.
+
+This is the in-VMEM TRSM used by the sup-row / sup-sup numeric kernels
+(the "solve against the source supernode's diagonal block" step).  The
+whole problem fits one VMEM block by construction: supernode widths are
+capped at analysis time (max_super ≤ 128, MXU-aligned), and panel heights
+are tiled by the caller.
+
+Tiling: grid over row tiles of X (TILE_NR rows each); U (k×k, k ≤ 128)
+is resident in VMEM for every tile.  Inside the kernel the solve runs as
+k sequential column updates on the VPU/MXU (the recurrence is inherently
+sequential in k, parallel over rows — exactly the paper's sup-row shape).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _trsm_kernel(u_ref, x_ref, y_ref, *, k: int):
+    x = x_ref[...]
+    u = u_ref[...]
+
+    def body(j, y):
+        acc = x[:, j] - y @ u[:, j]
+        return y.at[:, j].set(acc / u[j, j])
+
+    y = jax.lax.fori_loop(0, k, body, jnp.zeros_like(x))
+    y_ref[...] = y
+
+
+@functools.partial(jax.jit, static_argnames=("tile_nr", "interpret"))
+def trsm_upper(u: jax.Array, x: jax.Array, tile_nr: int = 256,
+               interpret: bool = True) -> jax.Array:
+    """Solve Y @ U = X. u: (k, k) upper-tri; x: (nr, k)."""
+    nr, k = x.shape
+    tile = min(tile_nr, max(nr, 1))
+    grid = (pl.cdiv(nr, tile),)
+    return pl.pallas_call(
+        functools.partial(_trsm_kernel, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k, k), lambda i: (0, 0)),        # U resident
+            pl.BlockSpec((tile, k), lambda i: (i, 0)),     # row tile of X
+        ],
+        out_specs=pl.BlockSpec((tile, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nr, k), x.dtype),
+        interpret=interpret,
+    )(u, x)

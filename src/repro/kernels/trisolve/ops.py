@@ -1,0 +1,20 @@
+"""jit'd wrapper for the TRSM Pallas kernel (padding to TPU-friendly tiles)."""
+import jax
+import jax.numpy as jnp
+
+from .kernel import trsm_upper
+from .ref import trsm_upper_ref
+
+__all__ = ["trsm", "trsm_upper_ref"]
+
+
+def trsm(u: jax.Array, x: jax.Array, interpret: bool = True) -> jax.Array:
+    """Solve Y @ U = X with the Pallas kernel. Pads k to a multiple of 8
+    (sublane) — padded diagonal is identity so the solve is unaffected."""
+    nr, k = x.shape
+    kp = max(8, -(-k // 8) * 8)
+    if kp != k:
+        u_p = jnp.eye(kp, dtype=u.dtype).at[:k, :k].set(u)
+        x_p = jnp.zeros((nr, kp), x.dtype).at[:, :k].set(x)
+        return trsm_upper(u_p, x_p, interpret=interpret)[:, :k]
+    return trsm_upper(u, x, interpret=interpret)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the TRSM kernel: solve Y @ U = X, U upper-triangular
+(non-unit diagonal), vectorized over rows of X."""
+import jax.numpy as jnp
+import jax
+
+
+def trsm_upper_ref(u: jax.Array, x: jax.Array) -> jax.Array:
+    """u: (k, k) upper-triangular; x: (nr, k). Returns y with y @ u == x."""
+    k = u.shape[0]
+
+    def body(j, y):
+        acc = x[:, j] - y @ u[:, j]          # y[:, >=j] are still 0
+        return y.at[:, j].set(acc / u[j, j])
+
+    y0 = jnp.zeros_like(x)
+    return jax.lax.fori_loop(0, k, body, y0)

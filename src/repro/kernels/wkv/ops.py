@@ -1,0 +1,22 @@
+"""jit'd wrapper for the WKV Pallas kernel."""
+import jax
+import jax.numpy as jnp
+
+from .kernel import wkv
+from .ref import wkv_ref
+
+__all__ = ["wkv", "wkv_ref", "wkv_padded"]
+
+
+def wkv_padded(r, k, v, w, u, bt: int = 256, interpret: bool = True):
+    """Pads T to a tile multiple (decay w pads with 1.0 = identity)."""
+    bh, t, hs = r.shape
+    bt = min(bt, t)
+    tp = -(-t // bt) * bt
+    if tp != t:
+        pad = ((0, 0), (0, tp - t), (0, 0))
+        r = jnp.pad(r, pad)
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+        w = jnp.pad(w, pad, constant_values=1.0)
+    return wkv(r, k, v, w, u, bt=bt, interpret=interpret)[:, :t]

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the RWKV6 WKV recurrence (per-head, time scan):
+
+    y_t = r_t · (S_{t-1} + (u ⊙ k_t) v_tᵀ)
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+"""
+import jax
+import jax.numpy as jnp
+
+
+def wkv_ref(r, k, v, w, u, s0=None):
+    """r/k/v/w: (BH, T, hs); u: (hs,) or (BH, hs). Returns (y, s_final)."""
+    bh, t, hs = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((bh, hs, hs), jnp.float32)
+    uu = u if u.ndim == 2 else jnp.broadcast_to(u[None], (bh, hs))
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp
+        kv = kt[:, :, None] * vt[:, None, :]
+        y = jnp.einsum("bk,bkv->bv", rt, s + uu[:, :, None] * kv)
+        s = wt[:, :, None] * s + kv
+        return s, y
+
+    s, ys = jax.lax.scan(
+        step, s0, (jnp.moveaxis(r, 1, 0).astype(jnp.float32),
+                   jnp.moveaxis(k, 1, 0).astype(jnp.float32),
+                   jnp.moveaxis(v, 1, 0).astype(jnp.float32),
+                   jnp.moveaxis(w, 1, 0).astype(jnp.float32)))
+    return jnp.moveaxis(ys, 0, 1), s

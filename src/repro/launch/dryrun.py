@@ -1,0 +1,198 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+MUST be run as a fresh process (``python -m repro.launch.dryrun``): the
+XLA_FLAGS below force 512 host devices and must be set before jax
+initializes. Do NOT import this module from test/bench processes.
+
+Per cell:
+  - builds ShapeDtypeStruct input specs (no allocation),
+  - jit(train_step | prefill_step | decode_step) with in/out shardings,
+  - .lower().compile() on the production mesh,
+  - records memory_analysis() + our HLO cost parse (FLOPs, bytes,
+    collective bytes with while-trip multiplication) → JSON artifact.
+
+Usage:
+  python -m repro.launch.dryrun --arch all --shape all --mesh both \
+      [--out artifacts/dryrun] [--hlo-dir artifacts/hlo]
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+# ruff: noqa: E402
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.configs.shapes import SHAPES, input_specs, cell_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as T
+from repro.models import sharding as Sh
+from repro.optim import adamw
+from repro.roofline import analysis as RA
+from repro.train.train_step import make_train_step
+from repro.serve.serve_step import make_prefill_step, make_decode_step
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def params_shape_tree(cfg, dtype=jnp.bfloat16):
+    """ShapeDtypeStructs of params via eval_shape (no allocation)."""
+    return jax.eval_shape(
+        lambda k: T.init_params(cfg, k, dtype=dtype), jax.random.PRNGKey(0))
+
+
+def lower_cell(cfg, shape, mesh, mesh_name, opt=True, seq_chunk=512,
+               save_hlo_dir=None):
+    Sh.set_mesh_context(mesh)     # layer-internal sharding constraints
+    pshapes = params_shape_tree(cfg)
+    pspecs = Sh.param_specs(cfg, pshapes)
+    specs = input_specs(cfg, shape)
+    ispecs = Sh.input_spec_tree(cfg, specs, mesh)
+    ns = lambda spec: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec,
+        is_leaf=lambda x: isinstance(x, P))
+    t0 = time.perf_counter()
+
+    if shape.kind == "train":
+        opt_cfg = adamw.AdamWConfig()
+        step = make_train_step(cfg, opt_cfg, seq_chunk=seq_chunk,
+                               constrain=Sh.activation_constrainer(mesh))
+        ostate_shapes = jax.eval_shape(adamw.init_state, pshapes)
+        zspecs = Sh.zero_specs(pspecs, pshapes, mesh)   # ZeRO m/v over 'data'
+        ospecs = adamw.AdamWState(step=P(), m=zspecs, v=zspecs)
+        fn = jax.jit(
+            lambda p, o, b: step(p, o, None, b)[:2],
+            in_shardings=(ns(pspecs), ns(ospecs), ns(ispecs)),
+            out_shardings=(ns(pspecs), ns(ospecs)),
+        )
+        lowered = fn.lower(pshapes, ostate_shapes, specs)
+    elif shape.kind == "prefill":
+        prefill = make_prefill_step(cfg)
+        fn = jax.jit(
+            lambda p, b: prefill(p, **b),
+            in_shardings=(ns(pspecs), ns(ispecs)),
+        )
+        lowered = fn.lower(pshapes, specs)
+    else:  # decode
+        decode = make_decode_step(cfg)
+        cache_specs_ = specs["cache"]
+        cspecs = ispecs["cache"]
+
+        def dec(p, tokens, cache, pos, embeds=None, positions=None):
+            return decode(p, tokens, cache, pos, embeds=embeds,
+                          positions=positions)
+
+        in_sh = dict(tokens=ispecs["tokens"], cache=cspecs, pos=P())
+        kwargs = dict(tokens=specs["tokens"], cache=cache_specs_,
+                      pos=specs["pos"])
+        if "embeds" in specs:
+            in_sh["embeds"] = ispecs["embeds"]
+            kwargs["embeds"] = specs["embeds"]
+        if "positions" in specs:
+            in_sh["positions"] = ispecs["positions"]
+            kwargs["positions"] = specs["positions"]
+        fn = jax.jit(
+            lambda p, kw: dec(p, **kw),
+            in_shardings=(ns(pspecs), ns(in_sh)),
+            out_shardings=(NamedSharding(mesh, P()), ns(cspecs)),
+            donate_argnums=(1,),       # cache updated in place (aliased)
+        )
+        lowered = fn.lower(pshapes, kwargs)
+    t_lower = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    if save_hlo_dir:
+        os.makedirs(save_hlo_dir, exist_ok=True)
+        with open(os.path.join(
+                save_hlo_dir, f"{cfg.name}__{shape.name}__{mesh_name}.hlo"),
+                "w") as f:
+            f.write(hlo)
+    n_tokens = (shape.global_batch * shape.seq_len if shape.kind != "decode"
+                else shape.global_batch * 1)
+    roof = RA.compute(cfg, shape.name, shape.kind, mesh_name,
+                      chips=mesh.size, hlo_text=hlo, n_tokens=n_tokens,
+                      mem_stats=mem)
+    rec = roof.to_dict()
+    rec.update(
+        t_lower_s=t_lower, t_compile_s=t_compile,
+        mem_args_gib=mem.argument_size_in_bytes / 2**30,
+        mem_out_gib=mem.output_size_in_bytes / 2**30,
+        mem_temp_gib=mem.temp_size_in_bytes / 2**30,
+        status="ok",
+    )
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--hlo-dir", default=None)
+    ap.add_argument("--seq-chunk", type=int, default=512)
+    args = ap.parse_args(argv)
+
+    archs = list(registry.ARCHS) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    results = []
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        mesh_name = "pod2x16x16" if multi else "pod16x16"
+        for an in archs:
+            cfg = registry.get(an)
+            for sn in shapes:
+                shape = SHAPES[sn]
+                ok, why = cell_applicable(cfg, shape)
+                tag = f"{cfg.name} × {shape.name} × {mesh_name}"
+                if not ok:
+                    print(f"[skip] {tag}: {why}", flush=True)
+                    results.append(dict(arch=cfg.name, shape=sn,
+                                        mesh=mesh_name, status="skipped",
+                                        reason=why))
+                    continue
+                try:
+                    rec = lower_cell(cfg, shape, mesh, mesh_name,
+                                     seq_chunk=args.seq_chunk,
+                                     save_hlo_dir=args.hlo_dir)
+                    results.append(rec)
+                    print(f"[ok]   {tag}: compile={rec['t_compile_s']:.1f}s "
+                          f"temp={rec['mem_temp_gib']:.2f}GiB "
+                          f"flops/dev={rec['flops_per_device']:.3e} "
+                          f"coll/dev={rec['coll_bytes_per_device']:.3e} "
+                          f"bottleneck={rec['bottleneck']}", flush=True)
+                except Exception as e:
+                    traceback.print_exc()
+                    results.append(dict(arch=cfg.name, shape=sn,
+                                        mesh=mesh_name, status="error",
+                                        error=str(e)[:500]))
+                    print(f"[FAIL] {tag}: {e}", flush=True)
+    out_path = os.path.join(
+        args.out, f"dryrun_{'_'.join(m and 'multi' or 'single' for m in meshes)}.json")
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=1)
+    n_ok = sum(1 for r in results if r.get("status") == "ok")
+    n_skip = sum(1 for r in results if r.get("status") == "skipped")
+    n_err = len(results) - n_ok - n_skip
+    print(f"\nDRYRUN: {n_ok} ok, {n_skip} skipped (documented), {n_err} errors"
+          f" → {out_path}")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,72 @@
+"""Training launcher CLI.
+
+    PYTHONPATH=src python -m repro.launch.train --arch phi3-medium-14b \
+        --reduced --steps 200 --batch 8 --seq 256 --ckpt-dir /tmp/ck
+
+Runs on whatever devices exist (1 CPU here; the same entry point on a TPU
+pod slice picks up the full mesh via jax.distributed).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.data.pipeline import SyntheticLM
+from repro.models import transformer as T
+from repro.optim import adamw
+from repro.optim.compression import CompressionConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="phi3-medium-14b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="tiny same-family config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--compress", default="none",
+                    choices=["none", "bf16", "int8"])
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = registry.get(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    params = T.init_params(cfg, jax.random.PRNGKey(args.seed),
+                           dtype=jnp.float32)
+    n_params = sum(p.size for p in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
+          f"devices={len(jax.devices())}")
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=args.seq,
+                       global_batch=args.batch, seed=args.seed)
+    tcfg = TrainerConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                         ckpt_dir=args.ckpt_dir, microbatch=args.microbatch,
+                         seq_chunk=min(512, args.seq))
+    trainer = Trainer(tcfg, cfg, params, data,
+                      opt_cfg=adamw.AdamWConfig(
+                          lr=args.lr, total_steps=args.steps,
+                          warmup_steps=max(args.steps // 20, 5)),
+                      comp_cfg=CompressionConfig(kind=args.compress))
+    trainer.install_signal_handler()
+    if args.resume:
+        r = trainer.maybe_resume()
+        print(f"resumed from step {r}" if r is not None else "fresh start")
+    log = trainer.run()
+    if log:
+        print(f"final loss {log[-1]['loss']:.4f} "
+              f"(first {log[0]['loss']:.4f}); stragglers={trainer.n_stragglers}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,626 @@
+"""Model-zoo layers: pure-jnp, param-dict based (no flax).
+
+Every layer comes in two execution forms:
+  - sequence form  (train/prefill): full (B, S, ...) tensors; attention is
+    chunked online-softmax (flash-style in pure XLA; the Pallas kernel in
+    repro.kernels.flashattn is the TPU-optimized drop-in, flag-gated);
+  - step form (decode): one token, carried cache/state.
+
+Conventions: params are dicts of jnp arrays; an extra leading axis stacks
+layers for scan-over-layers (added by transformer.py, not here).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MambaCfg
+
+F32 = jnp.float32
+
+# perf-iteration knobs (EXPERIMENTS.md §Perf): VMEM-ish working-set tiles
+# for the pure-XLA paths. Env-tunable so dry-run sweeps can measure them.
+import os as _os
+ATTN_CHUNK_K = int(_os.environ.get("REPRO_ATTN_CHUNK", "1024"))
+MAMBA_CHUNK = int(_os.environ.get("REPRO_MAMBA_CHUNK", "128"))
+
+
+# --------------------------------------------------------------------------
+# basics
+# --------------------------------------------------------------------------
+def rms_norm(x, w, eps=1e-5):
+    x32 = x.astype(F32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def init_rms(d, dtype):
+    return jnp.ones((d,), dtype)
+
+
+def _dense(key, shape, dtype, scale=None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale or 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, F32) * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# RoPE / M-RoPE
+# --------------------------------------------------------------------------
+def rope_freqs(head_dim, theta):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=F32) / head_dim))
+
+
+def apply_rope(x, positions, theta):
+    """x: (B, S, H, D); positions: (B, S) int."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                        # (D/2,)
+    ang = positions.astype(F32)[..., None] * freqs      # (B, S, D/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.stack([y1, y2], axis=-1).reshape(x.shape).astype(x.dtype)
+
+
+def apply_mrope(x, positions, theta, sections):
+    """M-RoPE (Qwen2-VL): positions (3, B, S) = (t, h, w) ids; the D/2
+    frequency slots are split into `sections` groups, each rotated by its
+    own position stream."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                        # (D/2,)
+    sec = jnp.concatenate([jnp.full((s,), i, jnp.int32)
+                           for i, s in enumerate(sections)])
+    # pick per-slot position stream: (B, S, D/2)
+    pos = jnp.take(positions, sec, axis=0)              # (D/2 picks of (B,S))
+    pos = jnp.moveaxis(pos, 0, -1).astype(F32)          # (B, S, D/2)
+    ang = pos * freqs
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.stack([y1, y2], axis=-1).reshape(x.shape).astype(x.dtype)
+
+
+def _rope(cfg: ArchConfig, x, positions):
+    if cfg.rope_type is None:
+        return x
+    if cfg.rope_type == "mrope":
+        return apply_mrope(x, positions, cfg.rope_theta, cfg.mrope_sections)
+    return apply_rope(x, positions, cfg.rope_theta)
+
+
+# --------------------------------------------------------------------------
+# attention (GQA, chunked online-softmax)
+# --------------------------------------------------------------------------
+def init_attention(cfg: ArchConfig, key, dtype):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, hkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = dict(
+        wq=_dense(ks[0], (d, h * hd), dtype),
+        wk=_dense(ks[1], (d, hkv * hd), dtype),
+        wv=_dense(ks[2], (d, hkv * hd), dtype),
+        wo=_dense(ks[3], (h * hd, d), dtype),
+    )
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((hkv * hd,), dtype)
+    return p
+
+
+def _chunked_causal_attention(q, k, v, q_offset=0, chunk_k=None):
+    chunk_k = chunk_k or ATTN_CHUNK_K
+    """Online-softmax causal attention in pure XLA: one scan over KV chunks
+    with (m, l, acc) carried for all query positions.
+
+    Memory-critical details (dry-run verified):
+      - the KV offset is a *carried dynamic counter*, so causal masks are
+        recomputed per step from dynamic scalars — XLA cannot hoist
+        full-shape mask stacks out of the loop (a 5+ GiB/device trap);
+      - each kv_step is jax.checkpoint'ed: the backward pass recomputes the
+        (B,H,T,CK) logits per chunk instead of saving them (the pure-XLA
+        analogue of flash-attention's O(T) backward).
+    q: (B, T, H, D); k/v: (B, S, Hkv, D); returns (B, T, H, D)."""
+    b, t, h, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    scale = 1.0 / math.sqrt(d)
+    chunk_k = min(chunk_k, s)
+    nk = -(-s // chunk_k)
+    sk = nk * chunk_k
+    if sk != s:
+        k = jnp.pad(k, ((0, 0), (0, sk - s), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sk - s), (0, 0), (0, 0)))
+    kc = k.reshape(b, nk, chunk_k, hkv, d)
+    vc = v.reshape(b, nk, chunk_k, hkv, d)
+    qs = (q.astype(F32) * scale).astype(q.dtype)
+    rows = q_offset + jax.lax.iota(jnp.int32, t)        # (T,)
+
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def kv_step_inner(carry_mlacc, koff, kblk, vblk):
+        m, l, acc = carry_mlacc
+        logit = jnp.einsum("bqhd,bkhd->bhqk", qs,
+                           jnp.repeat(kblk, g, axis=2),
+                           preferred_element_type=F32)
+        cols = koff + jax.lax.iota(jnp.int32, chunk_k)  # dynamic offset
+        mask = (rows[:, None] >= cols[None, :]) & (cols < s)[None, :]
+        logit = jnp.where(mask[None, None], logit, -1e30)
+        m_new = jnp.maximum(m, logit.max(axis=-1))
+        p = jnp.exp(logit - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(vblk.dtype),
+            jnp.repeat(vblk, g, axis=2), preferred_element_type=F32)
+        return m_new, l_new, acc
+
+    def kv_step(carry, inp):
+        (koff, m, l, acc) = carry
+        kblk, vblk = inp
+        m, l, acc = kv_step_inner((m, l, acc), koff, kblk, vblk)
+        return (koff + chunk_k, m, l, acc), None
+
+    m0 = jnp.full((b, h, t), -1e30, F32)
+    l0 = jnp.zeros((b, h, t), F32)
+    a0 = jnp.zeros((b, h, t, d), F32)
+    (_, m, l, acc), _ = jax.lax.scan(
+        kv_step, (jnp.int32(0), m0, l0, a0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0)))
+    l = jnp.where(l == 0, 1.0, l)
+    out = (acc / l[..., None]).astype(q.dtype)          # (B, H, T, D)
+    return jnp.moveaxis(out, 1, 2)                      # (B, T, H, D)
+
+
+def attention_seq(cfg: ArchConfig, p, x, positions, use_flash_kernel=False):
+    """Sequence-form attention. positions: (B,S) or (3,B,S) for mrope."""
+    from repro.models.sharding import ctx_constrain
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    h, hkv = cfg.n_heads, cfg.n_kv_heads
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    # NOTE (measured in the dry-run): explicit head constraints here FORCE
+    # extra reshards and regress memory (phi3 12.2→17.0 GiB); GSPMD's
+    # propagation from the Megatron weight shardings picks better layouts.
+    # Kept as a documented refuted hypothesis — see EXPERIMENTS.md §Perf.
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, hkv, hd)
+    v = v.reshape(b, s, hkv, hd)
+    q = _rope(cfg, q, positions)
+    k = _rope(cfg, k, positions)
+    if use_flash_kernel:
+        from repro.kernels.flashattn.kernel import flash_attention
+        o = flash_attention(jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1),
+                            jnp.moveaxis(v, 2, 1), interpret=True)
+        o = jnp.moveaxis(o, 1, 2)
+    else:
+        o = _chunked_causal_attention(q, k, v)
+    return o.reshape(b, s, h * hd) @ p["wo"], (k, v)
+
+
+def attention_step(cfg: ArchConfig, p, x, positions, cache_kv, pos):
+    """Decode-form attention: x (B,1,d); cache_kv = (k,v) with shape
+    (B, S_max, Hkv, D); pos = current write index (0-based)."""
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    h, hkv = cfg.n_heads, cfg.n_kv_heads
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = _rope(cfg, q.reshape(b, 1, h, hd), positions)
+    k = _rope(cfg, k.reshape(b, 1, hkv, hd), positions)
+    v = v.reshape(b, 1, hkv, hd)
+    ck, cv = cache_kv
+    ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), pos, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), pos, axis=1)
+    g = h // hkv
+    s_max = ck.shape[1]
+    kk = jnp.repeat(ck, g, axis=2)
+    vv = jnp.repeat(cv, g, axis=2)
+    logit = jnp.einsum("bqhd,bkhd->bhqk", q.astype(F32), kk.astype(F32))
+    logit = logit / math.sqrt(hd)
+    valid = jnp.arange(s_max)[None, None, None, :] <= pos
+    logit = jnp.where(valid, logit, -1e30)
+    w = jax.nn.softmax(logit, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", w.astype(vv.dtype), vv)
+    return o.reshape(b, 1, h * hd) @ p["wo"], (ck, cv)
+
+
+# --------------------------------------------------------------------------
+# FFN: swiglu / geglu / gelu — and MoE
+# --------------------------------------------------------------------------
+def init_mlp(cfg: ArchConfig, key, dtype, d_ff=None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act == "gelu":
+        return dict(w_up=_dense(ks[0], (d, f), dtype),
+                    w_down=_dense(ks[1], (f, d), dtype))
+    return dict(w_gate=_dense(ks[0], (d, f), dtype),
+                w_up=_dense(ks[1], (d, f), dtype),
+                w_down=_dense(ks[2], (f, d), dtype))
+
+
+def mlp(cfg: ArchConfig, p, x):
+    if cfg.act == "gelu":
+        return jax.nn.gelu(x @ p["w_up"]) @ p["w_down"]
+    g = x @ p["w_gate"]
+    u = x @ p["w_up"]
+    act = jax.nn.silu(g) if cfg.act == "swiglu" else jax.nn.gelu(g)
+    return (act * u) @ p["w_down"]
+
+
+def init_moe(cfg: ArchConfig, key, dtype):
+    d = cfg.d_model
+    m = cfg.moe
+    e, f = m.n_experts, m.d_ff_expert
+    ks = jax.random.split(key, 4)
+    return dict(
+        router=_dense(ks[0], (d, e), dtype, scale=0.02),
+        w_gate=_dense(ks[1], (e, d, f), dtype),
+        w_up=_dense(ks[2], (e, d, f), dtype),
+        w_down=_dense(ks[3], (e, f, d), dtype),
+    )
+
+
+def moe(cfg: ArchConfig, p, x):
+    """Group-local, sort-based, capacity-limited top-k dispatch.
+
+    Tokens are split into G groups aligned with the data-parallel shards
+    (G = product of data axes in the mesh context; 1 on a single device).
+    Ranking/capacity/scatter are all *within-group*, so dispatch never moves
+    tokens across data shards — the only collectives are the expert/tensor
+    parallel ones over 'model' (GShard-style per-device capacity semantics).
+
+    Memory: O(T·k) indices + (G, E, C_local, d) buffers, sharded
+    (dp, 'model'|None, None, ...) per the config's expert-shard mode.
+    Returns (out, aux_losses dict)."""
+    from repro.models.sharding import ctx_groups, ctx_constrain
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    k = m.top_k
+    e = m.n_experts
+    grp = ctx_groups()
+    if t % grp != 0:
+        grp = 1
+    tl = t // grp                                       # tokens per group
+    xf = x.reshape(t, d)
+    logits = (xf @ p["router"]).astype(F32)             # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, ids = jax.lax.top_k(probs, k)                 # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # --- within-group ranking via stable sort on (group, expert) keys ----
+    flat_e = ids.reshape(grp, tl * k)                   # (G, tl*k)
+    order = jnp.argsort(flat_e, axis=1, stable=True)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    iota = jnp.broadcast_to(jnp.arange(tl * k, dtype=jnp.int32), (grp, tl * k))
+    first = jnp.full((grp, e), tl * k, jnp.int32).at[
+        jnp.arange(grp)[:, None], sorted_e].min(iota)
+    pos_sorted = iota - jnp.take_along_axis(first, sorted_e, axis=1)
+    pos = jnp.zeros((grp, tl * k), jnp.int32).at[
+        jnp.arange(grp)[:, None], order].set(pos_sorted)
+
+    cap = max(int(math.ceil(tl * k / e * m.capacity_factor)), 1)
+    keep = pos < cap
+    slot = jnp.where(keep, flat_e * cap + pos, e * cap)  # (G, tl*k)
+    # --- dispatch (group-local scatter) ----------------------------------
+    xrep = jnp.repeat(xf.reshape(grp, tl, d), k, axis=1)  # (G, tl*k, d)
+    # vmap over groups → XLA sees a *batched* scatter (operand_batching_dims)
+    # that GSPMD partitions along dp without collective fallback (measured:
+    # explicit 2D-index scatters were collective-permuted at 4.3 GiB/layer).
+    buf = jax.vmap(lambda sl, xr, kp: jnp.zeros(
+        (e * cap + 1, d), x.dtype).at[sl].add(kp[:, None].astype(x.dtype) * xr)
+    )(slot, xrep, keep)
+    # stage 1: pin the scatter itself data-local (replicated over 'model') —
+    # otherwise GSPMD propagates the expert sharding into the scatter and
+    # falls back to full rematerialization (all-gather per layer).
+    buf = ctx_constrain(buf, "dp", None, None)
+    buf = buf[:, :-1].reshape(grp, e, cap, d)
+    # stage 2 (expert mode): explicit reshard = the expert-parallel
+    # all-to-all (each token crosses the 'model' axis once, as in GShard).
+    espec_in = ("dp", "model" if m.shard == "expert" else None, None, None)
+    buf = ctx_constrain(buf, *espec_in)
+    # --- expert computation (batched over G, E) ---------------------------
+    espec_f = ("dp", "model", None, None) if m.shard == "expert" else \
+        ("dp", None, None, "model")
+    g_ = ctx_constrain(jnp.einsum("gecd,edf->gecf", buf, p["w_gate"]), *espec_f)
+    u_ = ctx_constrain(jnp.einsum("gecd,edf->gecf", buf, p["w_up"]), *espec_f)
+    act = jax.nn.silu(g_) if cfg.act == "swiglu" else jax.nn.gelu(g_)
+    y = jnp.einsum("gecf,efd->gecd", act * u_, p["w_down"])
+    y = ctx_constrain(y, *espec_in)
+    # reverse all-to-all back to data-local before the combine gather
+    y = ctx_constrain(y, "dp", None, None, None)
+    # --- combine (group-local gather) -------------------------------------
+    yflat = jnp.concatenate([y.reshape(grp, e * cap, d),
+                             jnp.zeros((grp, 1, d), y.dtype)], axis=1)
+    back = jax.vmap(lambda yf, sl: yf[sl])(yflat, slot)   # batched gather
+    back = back * (keep * gate.reshape(grp, tl * k)
+                   ).astype(y.dtype)[..., None]
+    out = back.reshape(grp, tl, k, d).sum(axis=2).reshape(b, s, d)
+    # --- aux losses (Switch LB + router z-loss) ---------------------------
+    me = probs.mean(axis=0)                             # (E,)
+    ce = jnp.zeros(e, F32).at[flat_e.reshape(-1)].add(
+        keep.reshape(-1).astype(F32)) / max(t * k, 1)
+    lb = e * jnp.sum(me * ce)
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return out, dict(moe_lb=lb, moe_z=z)
+
+
+# --------------------------------------------------------------------------
+# Mamba (selective SSM, chunked associative scan)
+# --------------------------------------------------------------------------
+def init_mamba(cfg: ArchConfig, key, dtype):
+    d = cfg.d_model
+    m = cfg.mamba or MambaCfg()
+    di = m.expand * d
+    dtr = m.dt_rank or -(-d // 16)
+    ks = jax.random.split(key, 7)
+    return dict(
+        in_proj=_dense(ks[0], (d, 2 * di), dtype),
+        conv_w=_dense(ks[1], (m.d_conv, di), dtype, scale=0.5),
+        conv_b=jnp.zeros((di,), dtype),
+        x_proj=_dense(ks[2], (di, dtr + 2 * m.d_state), dtype),
+        dt_proj=_dense(ks[3], (dtr, di), dtype),
+        dt_bias=jnp.asarray(
+            jnp.log(jnp.expm1(jnp.exp(jax.random.uniform(
+                ks[4], (di,), F32, jnp.log(1e-3), jnp.log(1e-1))))),
+            dtype=F32).astype(dtype),
+        a_log=jnp.log(jnp.tile(jnp.arange(1, m.d_state + 1, dtype=F32),
+                               (di, 1))).astype(dtype),
+        d_skip=jnp.ones((di,), dtype),
+        out_proj=_dense(ks[5], (di, d), dtype),
+    )
+
+
+def _ssm_scan_chunk(a, bx, h0):
+    """h_t = a_t * h_{t-1} + bx_t along axis 1 (time). a/bx: (B, L, DI, N)."""
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+    a_cum, y = jax.lax.associative_scan(comb, (a, bx), axis=1)
+    return y + a_cum * h0[:, None], a_cum
+
+
+def mamba_seq(cfg: ArchConfig, p, x, chunk=None, return_state=False):
+    chunk = chunk or MAMBA_CHUNK
+    """Sequence form. x: (B, S, d). Chunked selective scan: sequential carry
+    across chunks, parallel (associative scan) within a chunk — bounds the
+    (B, L, DI, N) intermediate to one chunk."""
+    from repro.models.sharding import ctx_constrain
+    m = cfg.mamba or MambaCfg()
+    b, s, d = x.shape
+    di = m.expand * d
+    n = m.d_state
+    xz = x @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = ctx_constrain(xin, "dp", None, "model")   # d_inner tensor-parallel
+    z = ctx_constrain(z, "dp", None, "model")       # gate lives across body
+    # causal depthwise conv along time
+    kw = p["conv_w"].shape[0]
+    xpad = jnp.pad(xin, ((0, 0), (kw - 1, 0), (0, 0)))
+    xc = sum(xpad[:, i:i + s] * p["conv_w"][i] for i in range(kw)) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+    xc = ctx_constrain(xc, "dp", None, "model")
+    proj = xc @ p["x_proj"]
+    dtr = p["dt_proj"].shape[0]
+    dt, bmat, cmat = jnp.split(proj, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"] + p["dt_bias"])      # (B,S,DI)
+    a = -jnp.exp(p["a_log"].astype(F32))                        # (DI,N)
+
+    nchunks = -(-s // chunk)
+    sp = nchunks * chunk
+    def padt(v):
+        return jnp.pad(v, ((0, 0), (0, sp - s)) + ((0, 0),) * (v.ndim - 2))
+    dt_, b_, c_, xc_ = padt(dt), padt(bmat), padt(cmat), padt(xc)
+    dt_ = dt_.reshape(b, nchunks, chunk, di)
+    b_ = b_.reshape(b, nchunks, chunk, n)
+    c_ = c_.reshape(b, nchunks, chunk, n)
+    xc_ = xc_.reshape(b, nchunks, chunk, di)
+
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def chunk_step_inner(h, dtc, bc, cc, xcc):
+        # rematted: backward recomputes the (B,L,DI,N) scan states per chunk
+        # instead of saving them (32 chunks × 34 GiB would not fit anywhere)
+        abar = jnp.exp(dtc.astype(F32)[..., None] * a)          # (B,L,DI,N)
+        bx = (dtc * xcc).astype(F32)[..., None] * bc.astype(F32)[:, :, None, :]
+        abar = ctx_constrain(abar, "dp", None, "model", None)
+        bx = ctx_constrain(bx, "dp", None, "model", None)
+        hs, a_cum = _ssm_scan_chunk(abar, bx, h)
+        y = jnp.einsum("blin,bln->bli", hs, cc.astype(F32))
+        return hs[:, -1], y
+
+    def chunk_step(h, inp):
+        dtc, bc, cc, xcc = inp                  # (B, L, ...)
+        h_next, y = chunk_step_inner(h, dtc, bc, cc, xcc)
+        return h_next, y
+
+    h0 = jnp.zeros((b, di, n), F32)
+    h_fin, ys = jax.lax.scan(chunk_step, h0,
+                             (jnp.moveaxis(dt_, 1, 0), jnp.moveaxis(b_, 1, 0),
+                              jnp.moveaxis(c_, 1, 0), jnp.moveaxis(xc_, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, sp, di)[:, :s]
+    y = (y + xc.astype(F32) * p["d_skip"].astype(F32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    if return_state:
+        # NOTE: h_fin is the state after position sp-1 (padded); with padding
+        # dt=0 → abar=1, bx=0 → padded steps are identity. Exactly h after s-1.
+        conv_buf = jnp.pad(xin, ((0, 0), (kw - 1, 0), (0, 0)))[:, s:s + kw - 1]
+        return out, (conv_buf.astype(x.dtype), h_fin)
+    return out
+
+
+def mamba_step(cfg: ArchConfig, p, x, state):
+    """Decode form. x: (B,1,d); state = (conv_buf (B,kw-1,DI), h (B,DI,N))."""
+    m = cfg.mamba or MambaCfg()
+    b = x.shape[0]
+    n = m.d_state
+    conv_buf, h = state
+    xz = x[:, 0] @ p["in_proj"]
+    di = h.shape[1]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    kw = p["conv_w"].shape[0]
+    window = jnp.concatenate([conv_buf, xin[:, None, :]], axis=1)  # (B,kw,DI)
+    xc = jnp.einsum("bki,ki->bi", window, p["conv_w"]) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+    conv_buf = window[:, 1:]
+    proj = xc @ p["x_proj"]
+    dtr = p["dt_proj"].shape[0]
+    dt, bvec, cvec = jnp.split(proj, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"] + p["dt_bias"])
+    a = -jnp.exp(p["a_log"].astype(F32))
+    abar = jnp.exp(dt.astype(F32)[..., None] * a)               # (B,DI,N)
+    bx = (dt * xc).astype(F32)[..., None] * bvec.astype(F32)[:, None, :]
+    h = abar * h + bx
+    y = jnp.einsum("bin,bn->bi", h, cvec.astype(F32))
+    y = (y + xc.astype(F32) * p["d_skip"].astype(F32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return (y @ p["out_proj"])[:, None, :], (conv_buf, h)
+
+
+# --------------------------------------------------------------------------
+# RWKV6 (Finch): time-mix with data-dependent decay + channel-mix
+# --------------------------------------------------------------------------
+def init_rwkv(cfg: ArchConfig, key, dtype):
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    nh = d // hs
+    ks = jax.random.split(key, 10)
+    lora = 32 if d >= 512 else 8
+    return dict(
+        mix_r=jnp.full((d,), 0.5, dtype), mix_k=jnp.full((d,), 0.5, dtype),
+        mix_v=jnp.full((d,), 0.5, dtype), mix_w=jnp.full((d,), 0.5, dtype),
+        mix_g=jnp.full((d,), 0.5, dtype),
+        wr=_dense(ks[0], (d, d), dtype), wk=_dense(ks[1], (d, d), dtype),
+        wv=_dense(ks[2], (d, d), dtype), wg=_dense(ks[3], (d, d), dtype),
+        wo=_dense(ks[4], (d, d), dtype),
+        # data-dependent decay lora: w = exp(-exp(wbase + tanh(x@w1)@w2))
+        w_base=jnp.full((d,), -2.0, dtype),
+        w1=_dense(ks[5], (d, lora), dtype, scale=0.01),
+        w2=_dense(ks[6], (lora, d), dtype, scale=0.01),
+        u=_dense(ks[7], (nh, hs), dtype, scale=0.5),     # bonus
+        ln_x=jnp.ones((d,), dtype),
+        ln_cm=jnp.ones((d,), dtype),                     # channel-mix norm
+        # channel mix
+        cmix_k=jnp.full((d,), 0.5, dtype),
+        cmix_r=jnp.full((d,), 0.5, dtype),
+        ck=_dense(ks[8], (d, cfg.d_ff), dtype),
+        cv=_dense(ks[9], (cfg.d_ff, d), dtype),
+        cr=_dense(jax.random.fold_in(key, 99), (d, d), dtype),
+    )
+
+
+def _rwkv_mix(x, x_prev, mu):
+    return x + (x_prev - x) * mu
+
+
+def rwkv_time_mix_seq(cfg: ArchConfig, p, x, return_state=False,
+                      use_wkv_kernel=False):
+    """WKV recurrence over time. The pure-XLA scan round-trips the matrix
+    state through HBM every step (measured 2.06e15 B/dev on train_4k — the
+    worst memory term in the sweep); `use_wkv_kernel=True` routes through
+    the Pallas kernel (repro.kernels.wkv) that keeps the state VMEM-resident
+    (interpret-mode on CPU; compiled on TPU). x: (B,S,d)."""
+    b, s, d = x.shape
+    hs = cfg.rwkv_head_size
+    nh = d // hs
+    xprev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r = _rwkv_mix(x, xprev, p["mix_r"]) @ p["wr"]
+    k = _rwkv_mix(x, xprev, p["mix_k"]) @ p["wk"]
+    v = _rwkv_mix(x, xprev, p["mix_v"]) @ p["wv"]
+    g = jax.nn.silu(_rwkv_mix(x, xprev, p["mix_g"]) @ p["wg"])
+    xw = _rwkv_mix(x, xprev, p["mix_w"])
+    w = jnp.exp(-jnp.exp((p["w_base"]
+                          + jnp.tanh(xw @ p["w1"]) @ p["w2"]).astype(F32)))
+    rh = r.reshape(b, s, nh, hs)
+    kh = k.reshape(b, s, nh, hs)
+    vh = v.reshape(b, s, nh, hs)
+    wh = w.reshape(b, s, nh, hs)
+    u = p["u"].astype(F32)
+
+    if use_wkv_kernel and not return_state:
+        from repro.kernels.wkv.ops import wkv_padded
+        def bhfmt(a):
+            return jnp.moveaxis(a, 2, 1).reshape(b * nh, s, hs)
+        ub = jnp.broadcast_to(u[None], (b, nh, hs)).reshape(b * nh, hs)
+        yk = wkv_padded(bhfmt(rh), bhfmt(kh), bhfmt(vh), bhfmt(wh), ub)
+        y = jnp.moveaxis(yk.reshape(b, nh, s, hs), 1, 2).reshape(b, s, d)
+        y = rms_norm(y.astype(x.dtype), p["ln_x"], cfg.norm_eps)
+        return (y * g) @ p["wo"], None
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp                    # (B, nh, hs)
+        kv = kt[..., :, None] * vt[..., None, :]            # (B,nh,hs,hs)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, state + u[..., None] * kv)
+        state = wt[..., None] * state + kv
+        return state, y
+
+    st0 = jnp.zeros((b, nh, hs, hs), F32)
+    st_fin, ys = jax.lax.scan(
+        step, st0,
+        (jnp.moveaxis(rh, 1, 0).astype(F32), jnp.moveaxis(kh, 1, 0).astype(F32),
+         jnp.moveaxis(vh, 1, 0).astype(F32), jnp.moveaxis(wh, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, d)
+    y = rms_norm(y.astype(x.dtype), p["ln_x"], cfg.norm_eps)
+    out = (y * g) @ p["wo"]
+    if return_state:
+        return out, (x[:, -1], st_fin)
+    return out, None
+
+
+def rwkv_time_mix_step(cfg: ArchConfig, p, x, state):
+    """Decode form. state = (x_prev (B,d), S (B,nh,hs,hs))."""
+    b = x.shape[0]
+    d = x.shape[-1]
+    hs = cfg.rwkv_head_size
+    nh = d // hs
+    xprev, st = state
+    xt = x[:, 0]
+    r = _rwkv_mix(xt, xprev, p["mix_r"]) @ p["wr"]
+    k = _rwkv_mix(xt, xprev, p["mix_k"]) @ p["wk"]
+    v = _rwkv_mix(xt, xprev, p["mix_v"]) @ p["wv"]
+    g = jax.nn.silu(_rwkv_mix(xt, xprev, p["mix_g"]) @ p["wg"])
+    xw = _rwkv_mix(xt, xprev, p["mix_w"])
+    w = jnp.exp(-jnp.exp((p["w_base"]
+                          + jnp.tanh(xw @ p["w1"]) @ p["w2"]).astype(F32)))
+    rt = r.reshape(b, nh, hs).astype(F32)
+    kt = k.reshape(b, nh, hs).astype(F32)
+    vt = v.reshape(b, nh, hs).astype(F32)
+    wt = w.reshape(b, nh, hs)
+    u = p["u"].astype(F32)
+    kv = kt[..., :, None] * vt[..., None, :]
+    y = jnp.einsum("bhk,bhkv->bhv", rt, st + u[..., None] * kv)
+    st = wt[..., None] * st + kv
+    y = y.reshape(b, d)
+    y = rms_norm(y.astype(x.dtype), p["ln_x"], cfg.norm_eps)
+    out = ((y * g) @ p["wo"])[:, None, :]
+    return out, (xt, st)
+
+
+def rwkv_channel_mix(cfg: ArchConfig, p, x, x_prev=None):
+    """x: (B,S,d) (sequence) or (B,d) with explicit x_prev (step)."""
+    if x.ndim == 3:
+        xprev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        xprev = x_prev
+    k = _rwkv_mix(x, xprev, p["cmix_k"]) @ p["ck"]
+    k = jnp.square(jax.nn.relu(k))
+    r = jax.nn.sigmoid(_rwkv_mix(x, xprev, p["cmix_r"]) @ p["cr"])
+    return r * (k @ p["cv"])

@@ -1,0 +1,247 @@
+"""Sharding policy: param/cache/input PartitionSpecs per mesh.
+
+Scheme (Megatron-style TP on 'model', DP over 'data' (+'pod'), optional
+FSDP over 'data' for ≥100B archs):
+
+  embeddings / lm_head (V, d)      → vocab on 'model'  (chunked CE keeps the
+                                     sharded-logits form; no full-vocab gather)
+  attn  wq/wk/wv (d, H·hd)         → heads on 'model' (GSPMD pads non-divisible
+        wo (H·hd, d)                 head counts; kv-head padding is the
+                                     documented memory cost of TP>kv)
+  mlp   up/gate (d, f) ↔ down      → f on 'model'
+  moe   experts (E, d, f)          → E on 'model' (shard="expert") or f on
+                                     'model' (shard="ffn", e.g. grok's E=8<16)
+  mamba d_inner dims               → 'model'
+  rwkv  head dims                  → 'model'
+  norms, routers, mixes            → replicated
+  FSDP  (cfg.fsdp)                 → additionally shard d_model dim on 'data'
+
+Caches: batch on data axes when divisible, else *sequence* dim on 'data'
+(sequence-parallel KV for long_500k's batch=1), kv-heads/state on 'model'.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+def data_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+# --------------------------------------------------------------------------
+# trace-time mesh context: lets layer internals (MoE dispatch buffers, SSM
+# intermediates) pin shardings without threading the mesh through every call.
+# Set by dryrun/train launchers before tracing; no-op otherwise.
+# --------------------------------------------------------------------------
+_CTX = {"mesh": None}
+
+
+def set_mesh_context(mesh):
+    _CTX["mesh"] = mesh
+
+
+def ctx_groups() -> int:
+    """Number of data-parallel groups in the mesh context (1 without one).
+    MoE dispatch keeps capacity/ranking local to each group."""
+    mesh = _CTX["mesh"]
+    if mesh is None:
+        return 1
+    g = 1
+    for a in data_axes(mesh):
+        g *= mesh.shape[a]
+    return g
+
+
+def ctx_constrain(x, *dims):
+    """Constrain x to PartitionSpec(*dims) where 'dp' expands to the data
+    axes tuple. No-op without a mesh context."""
+    mesh = _CTX["mesh"]
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding
+    daxes = data_axes(mesh)
+    spec = P(*[daxes if d == "dp" else d for d in dims])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def batch_spec(mesh) -> P:
+    return P(data_axes(mesh),)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def param_specs(cfg: ArchConfig, params_shapes) -> dict:
+    """PartitionSpec pytree matching the params tree (works on either real
+    params or a ShapeDtypeStruct tree)."""
+    moe_shard = cfg.moe.shard if cfg.moe else "expert"
+
+    def rule(path, leaf):
+        p = _path_str(path)
+        nd = len(leaf.shape)
+        lead = (None,) if "blocks" in p else ()   # stacked period axis
+
+        def spec(*tail):
+            full = lead + tail
+            assert len(full) == nd, (p, leaf.shape, full)
+            return P(*full)
+
+        name = p.split("/")[-1]
+        if name in ("embed", "lm_head"):
+            return P("model", None)
+        if nd - len(lead) == 1:                    # biases/norms/mixes
+            if name in ("bq", "bk", "bv", "conv_b", "dt_bias", "d_skip"):
+                return spec("model")
+            return spec(None)
+        dsh = "data" if cfg.fsdp else None
+        if name in ("wq", "wk", "wv"):
+            return spec(dsh, "model")
+        if name == "wo":
+            return spec("model", dsh)
+        if name in ("w_gate", "w_up"):
+            if nd - len(lead) == 3:                # MoE experts (E, d, f)
+                return spec("model", dsh, None) if moe_shard == "expert" \
+                    else spec(None, dsh, "model")
+            return spec(dsh, "model")
+        if name == "w_down":
+            if nd - len(lead) == 3:                # (E, f, d)
+                return spec("model", None, dsh) if moe_shard == "expert" \
+                    else spec(None, "model", dsh)
+            return spec("model", dsh)
+        if name == "router":
+            return spec(None, None)
+        # mamba
+        if name == "in_proj":
+            return spec(dsh, "model")
+        if name == "conv_w":
+            return spec(None, "model")
+        if name == "x_proj":
+            return spec("model", None)
+        if name == "dt_proj":
+            return spec(None, "model")
+        if name == "a_log":
+            return spec("model", None)
+        if name == "out_proj":
+            return spec("model", dsh)
+        # rwkv (wk/wv hit the attention rule above — same layout intent)
+        if name in ("wr", "wg"):
+            return spec(dsh, "model")
+        if name == "w1":
+            return spec(None, None)
+        if name == "w2":
+            return spec(None, "model")
+        if name == "u":
+            return spec("model", None)
+        if name == "ck":
+            return spec(dsh, "model")
+        if name == "cv":
+            return spec("model", dsh)
+        if name == "cr":
+            return spec(dsh, None)
+        # rwkv reuses wk/wv names — handled above (2D: d→model out) ✓
+        return spec(*([None] * (nd - len(lead))))
+
+    return jax.tree_util.tree_map_with_path(rule, params_shapes)
+
+
+def cache_spec_tree(cfg: ArchConfig, cache_shapes, mesh) -> list:
+    """Specs for the decode cache (leaves lead with n_periods)."""
+    daxes = data_axes(mesh)
+    dsize = 1
+    for a in daxes:
+        dsize *= mesh.shape[a]
+
+    msize = mesh.shape.get("model", 1)
+
+    def rule_fix(path, leaf):
+        shape = leaf.shape
+        b = shape[1]
+        batch_ok = b % dsize == 0
+        bspec = daxes if batch_ok else None
+        nd = len(shape)
+        if nd == 5 and shape[3] == cfg.n_kv_heads:      # attn kv cache
+            if cfg.n_kv_heads % msize == 0:
+                sspec = None if batch_ok else "data"
+                return P(None, bspec, sspec, "model", None)
+            # kv heads don't divide the model axis (explicit *argument*
+            # shardings must divide): sequence-parallel KV cache instead
+            if shape[2] % msize == 0:
+                return P(None, bspec, "model", None, None)
+            return P(None, bspec, None, None, None)
+        if nd == 5:                                     # rwkv state (np,B,nh,hs,hs)
+            return P(None, bspec, "model", None, None)
+        if nd == 4 and cfg.mamba and shape[2] != (cfg.mamba.d_conv - 1):
+            return P(None, bspec, "model", None)        # mamba h (np,B,di,n)
+        if nd == 4:                                     # mamba conv (np,B,kw-1,di)
+            return P(None, bspec, None, "model")
+        if nd == 3:                                     # rwkv xprev (np,B,d)
+            return P(None, bspec, None)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(
+        rule_fix, cache_shapes,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def activation_constrainer(mesh):
+    """Residual-stream constraint for Megatron-SP: (B, S, d) lives batch-
+    sharded over data axes and sequence-sharded over 'model' at block
+    boundaries, so per-layer saved activations cost 1/(dp·tp) each."""
+    from jax.sharding import NamedSharding
+    daxes = data_axes(mesh)
+    sh = NamedSharding(mesh, P(daxes, "model", None))
+
+    def constrain(x):
+        if x.ndim == 3:
+            return jax.lax.with_sharding_constraint(x, sh)
+        return x
+
+    return constrain
+
+
+def zero_specs(pspecs, pshapes, mesh):
+    """ZeRO-style optimizer-state sharding: take the param spec and shard
+    the first still-replicated, divisible dimension over 'data'."""
+    dsize = mesh.shape.get("data", 1)
+
+    def rule(spec, shape):
+        dims = list(spec) + [None] * (len(shape.shape) - len(spec))
+        if "data" in [d for dim in dims for d in
+                      ((dim,) if not isinstance(dim, tuple) else dim)]:
+            return spec
+        for i, (d, n) in enumerate(zip(dims, shape.shape)):
+            if d is None and n % dsize == 0 and n >= dsize:
+                dims[i] = "data"
+                return P(*dims)
+        return spec
+
+    return jax.tree.map(rule, pspecs, pshapes,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def input_spec_tree(cfg: ArchConfig, specs: dict, mesh) -> dict:
+    daxes = data_axes(mesh)
+    dsize = 1
+    for a in daxes:
+        dsize *= mesh.shape[a]
+    out = {}
+    for k, v in specs.items():
+        if k == "cache":
+            out[k] = cache_spec_tree(cfg, v, mesh)
+        elif k == "pos":
+            out[k] = P()
+        elif k == "positions":                 # (3, B, S)
+            b = v.shape[1]
+            out[k] = P(None, daxes if b % dsize == 0 else None, None)
+        elif k == "embeds":
+            b = v.shape[0]
+            out[k] = P(daxes if b % dsize == 0 else None, None, None)
+        else:                                  # tokens/labels (B, S)
+            b = v.shape[0]
+            out[k] = P(daxes if b % dsize == 0 else None, None)
+    return out

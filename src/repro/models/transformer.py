@@ -1,0 +1,297 @@
+"""Unified decoder model over the arch-config family.
+
+Layer pattern: the config defines a *period* of sub-layers (e.g. Jamba:
+1 attention + 7 Mamba per period, MoE every 2nd position); the model scans
+over ``n_periods`` with per-position parameter stacks.  This keeps HLO size
+and compile time independent of depth (64–72-layer archs compile in seconds
+on 512 fake devices) — the roofline parser multiplies while-body costs by
+trip count.
+
+Params tree:
+  embed (V, d) [+ lm_head unless tied]  · final_norm
+  blocks: list over period positions, each a dict of stacked (n_periods, ...)
+  sub-layer params: {kind, ln1, attn/mamba/rwkv, ln2, mlp/moe}
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional  # noqa: F401
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MambaCfg
+from . import layers as L
+
+F32 = jnp.float32
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+def init_params(cfg: ArchConfig, key, dtype=jnp.bfloat16):
+    keys = jax.random.split(key, cfg.period + 2)
+    params = dict(
+        embed=(jax.random.normal(keys[0], (cfg.vocab, cfg.d_model), F32)
+               * 0.02).astype(dtype),
+        final_norm=L.init_rms(cfg.d_model, dtype),
+    )
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(
+            keys[1], (cfg.vocab, cfg.d_model), F32) * 0.02).astype(dtype)
+
+    kinds = cfg.layer_kinds()
+    fkinds = cfg.ffn_kinds()
+    blocks = []
+    for pos in range(cfg.period):
+        def init_one(k):
+            sub = {"ln1": L.init_rms(cfg.d_model, dtype)}
+            kk = jax.random.split(k, 3)
+            if kinds[pos] == "attn":
+                sub["attn"] = L.init_attention(cfg, kk[0], dtype)
+            elif kinds[pos] == "mamba":
+                sub["mamba"] = L.init_mamba(cfg, kk[0], dtype)
+            else:
+                sub["rwkv"] = L.init_rwkv(cfg, kk[0], dtype)
+            if kinds[pos] != "rwkv":     # rwkv carries its own channel mix
+                sub["ln2"] = L.init_rms(cfg.d_model, dtype)
+                if fkinds[pos] == "moe":
+                    sub["ffn"] = L.init_moe(cfg, kk[1], dtype)
+                elif cfg.d_ff:
+                    sub["ffn"] = L.init_mlp(cfg, kk[1], dtype)
+            return sub
+        pk = jax.random.split(keys[2 + pos], cfg.n_periods)
+        blocks.append(jax.vmap(init_one)(pk))
+    params["blocks"] = blocks
+    return params
+
+
+# --------------------------------------------------------------------------
+# sub-layer application (sequence / step)
+# --------------------------------------------------------------------------
+def _sublayer_seq(cfg, kind, fkind, sub, x, positions, collect_cache=False):
+    aux = {}
+    cache = None
+    h = L.rms_norm(x, sub["ln1"], cfg.norm_eps)
+    if kind == "attn":
+        o, kv = L.attention_seq(cfg, sub["attn"], h, positions)
+        if collect_cache:
+            cache = kv
+        x = x + o
+    elif kind == "mamba":
+        if collect_cache:
+            o, cache = L.mamba_seq(cfg, sub["mamba"], h, return_state=True)
+        else:
+            o = L.mamba_seq(cfg, sub["mamba"], h)
+        x = x + o
+    else:
+        o, st = L.rwkv_time_mix_seq(cfg, sub["rwkv"], h,
+                                    return_state=collect_cache)
+        x = x + o
+        h2 = L.rms_norm(x, sub["rwkv"]["ln_cm"], cfg.norm_eps)
+        x = x + L.rwkv_channel_mix(cfg, sub["rwkv"], h2)
+        if collect_cache:
+            cache = (st[0], st[1], h2[:, -1])
+        return x, aux, cache
+    if "ffn" in sub:
+        h = L.rms_norm(x, sub["ln2"], cfg.norm_eps)
+        if fkind == "moe":
+            o, moe_aux = L.moe(cfg, sub["ffn"], h)
+            aux.update(moe_aux)
+        else:
+            o = L.mlp(cfg, sub["ffn"], h)
+        x = x + o
+    return x, aux, cache
+
+
+def _sublayer_step(cfg, kind, fkind, sub, x, positions, state, pos):
+    h = L.rms_norm(x, sub["ln1"], cfg.norm_eps)
+    if kind == "attn":
+        o, state = L.attention_step(cfg, sub["attn"], h, positions, state, pos)
+        x = x + o
+    elif kind == "mamba":
+        o, state = L.mamba_step(cfg, sub["mamba"], h, state)
+        x = x + o
+    else:
+        o, st_t = L.rwkv_time_mix_step(cfg, sub["rwkv"], h, state[:2])
+        x = x + o
+        h2 = L.rms_norm(x, sub["rwkv"]["ln_cm"], cfg.norm_eps)
+        xprev_cm = state[2]
+        x = x + L.rwkv_channel_mix(cfg, sub["rwkv"], h2[:, 0],
+                                   x_prev=xprev_cm)[:, None, :]
+        state = (st_t[0], st_t[1], h2[:, 0])
+        return x, state
+    if "ffn" in sub:
+        h = L.rms_norm(x, sub["ln2"], cfg.norm_eps)
+        if fkind == "moe":
+            o, _ = L.moe(cfg, sub["ffn"], h)
+        else:
+            o = L.mlp(cfg, sub["ffn"], h)
+        x = x + o
+    return x, state
+
+
+# --------------------------------------------------------------------------
+# forward (train / prefill)
+# --------------------------------------------------------------------------
+def forward(cfg: ArchConfig, params, tokens=None, embeds=None, positions=None,
+            collect_cache=False, remat: Optional[bool] = None,
+            constrain=None):
+    """Returns (hidden (B,S,d), aux, caches|None). Logits via lm_logits().
+
+    constrain: optional fn(x) applying a sharding constraint to the residual
+    stream at period boundaries (Megatron-SP: saved activations live
+    sequence-sharded over the 'model' axis; GSPMD inserts the all-gather /
+    reduce-scatter pair around each block)."""
+    remat = cfg.remat if remat is None else remat
+    constrain = constrain or (lambda x: x)
+    if embeds is not None:
+        x = embeds
+        if tokens is not None:   # mixed stub: tokens embedded + added
+            x = x + params["embed"][tokens].astype(x.dtype)
+    else:
+        x = params["embed"][tokens]
+    b, s = x.shape[:2]
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, axis=0) \
+            if cfg.rope_type != "mrope" else \
+            jnp.arange(s, dtype=jnp.int32)[None, None, :].repeat(b, 1).repeat(3, 0)
+    kinds = cfg.layer_kinds()
+    fkinds = cfg.ffn_kinds()
+
+    def period_body(x, block_slices):
+        auxes = {}
+        caches = []
+        for pos in range(cfg.period):
+            # every checkpointed sub-layer's saved input lives seq-sharded
+            # over 'model' (Megatron-SP): 1/(dp·tp) memory per residual
+            x = constrain(x)
+            sub = block_slices[pos]
+            fn = lambda xx, ss, _pos=pos: _sublayer_seq(
+                cfg, kinds[_pos], fkinds[_pos], ss, xx, positions,
+                collect_cache)
+            if remat:
+                fn = jax.checkpoint(fn,
+                                    policy=jax.checkpoint_policies.nothing_saveable)
+            x, aux, cache = fn(x, sub)
+            for k2, v2 in aux.items():
+                auxes[k2] = auxes.get(k2, 0.0) + v2
+            caches.append(cache)
+        x = constrain(x)
+        return x, (auxes, caches)
+
+    def scan_body(x, blk):
+        x, (aux, caches) = period_body(x, blk)
+        return x, (aux, caches if collect_cache else None)
+
+    x, (auxes, caches) = jax.lax.scan(scan_body, x, params["blocks"])
+    aux = {k: v.sum() for k, v in auxes.items()}
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    # caches: list over period positions, leaves stacked (n_periods, B, S, ...)
+    return x, aux, caches
+
+
+def lm_logits(cfg: ArchConfig, params, hidden):
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("bsd,vd->bsv", hidden, head)
+
+
+def ce_loss_chunked(cfg: ArchConfig, params, hidden, labels, seq_chunk=512):
+    """Cross-entropy without materializing (B,S,V) logits: chunk the
+    sequence; per chunk compute logits (bf16 matmul, f32 reductions)."""
+    head = (params["embed"] if cfg.tie_embeddings else params["lm_head"])
+    b, s, d = hidden.shape
+    nch = -(-s // seq_chunk)
+    sp = nch * seq_chunk
+    if sp != s:
+        hidden = jnp.pad(hidden, ((0, 0), (0, sp - s), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, sp - s)), constant_values=-1)
+    hc = jnp.moveaxis(hidden.reshape(b, nch, seq_chunk, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, nch, seq_chunk), 1, 0)
+
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def chunk_ce(hidden_c, labels_c):
+        # rematted: the (B, chunk, V) logits are recomputed in backward
+        # instead of being saved per chunk (vocab 256k would cost GiBs).
+        logits = jnp.einsum("bsd,vd->bsv", hidden_c, head).astype(F32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(
+            logits, jnp.maximum(labels_c, 0)[..., None], axis=-1)[..., 0]
+        valid = (labels_c >= 0).astype(F32)
+        return ((lse - tgt) * valid).sum(), valid.sum()
+
+    def chunk_loss(carry, inp):
+        hidden_c, labels_c = inp
+        loss, cnt = chunk_ce(hidden_c, labels_c)
+        return (carry[0] + loss, carry[1] + cnt), None
+
+    (tot, cnt), _ = jax.lax.scan(chunk_loss, (0.0, 0.0), (hc, lc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# --------------------------------------------------------------------------
+# decode path
+# --------------------------------------------------------------------------
+def cache_specs(cfg: ArchConfig, batch: int, s_max: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStructs of the decode cache: list over the `period` sub-layer
+    positions; leaves stacked over periods (n_periods, ...) — the same layout
+    ``forward(collect_cache=True)`` produces and ``decode_step`` scans."""
+    sds = jax.ShapeDtypeStruct
+    hd = cfg.resolved_head_dim
+    m = cfg.mamba or MambaCfg()
+    di = m.expand * cfg.d_model
+    nh = cfg.d_model // cfg.rwkv_head_size if cfg.rwkv6 else 0
+    np_ = cfg.n_periods
+    out = []
+    for kind in cfg.layer_kinds():
+        if kind == "attn":
+            out.append((sds((np_, batch, s_max, cfg.n_kv_heads, hd), dtype),
+                        sds((np_, batch, s_max, cfg.n_kv_heads, hd), dtype)))
+        elif kind == "mamba":
+            out.append((sds((np_, batch, m.d_conv - 1, di), dtype),
+                        sds((np_, batch, di, m.d_state), F32)))
+        else:
+            out.append((sds((np_, batch, cfg.d_model), dtype),
+                        sds((np_, batch, nh, cfg.rwkv_head_size,
+                             cfg.rwkv_head_size), F32),
+                        sds((np_, batch, cfg.d_model), dtype)))
+    return out
+
+
+def init_cache(cfg: ArchConfig, batch: int, s_max: int, dtype=jnp.bfloat16):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_specs(cfg, batch, s_max, dtype),
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def decode_step(cfg: ArchConfig, params, tokens, cache, pos, embeds=None,
+                positions=None):
+    """One token for every sequence in the batch. Returns (logits, cache).
+    Scans over periods (cache leaves carry a leading n_periods axis)."""
+    if embeds is not None:
+        x = embeds
+        if tokens is not None:
+            x = x + params["embed"][tokens].astype(x.dtype)
+    else:
+        x = params["embed"][tokens]
+    b = x.shape[0]
+    if positions is None:
+        pp = jnp.full((b, 1), pos, jnp.int32)
+        positions = pp if cfg.rope_type != "mrope" else \
+            jnp.broadcast_to(pp[None], (3, b, 1))
+    kinds = cfg.layer_kinds()
+    fkinds = cfg.ffn_kinds()
+
+    def scan_body(x, per_slice):
+        blk, cache_row = per_slice
+        new_row = []
+        for posn in range(cfg.period):
+            x, st = _sublayer_step(cfg, kinds[posn], fkinds[posn], blk[posn],
+                                   x, positions, cache_row[posn], pos)
+            new_row.append(st)
+        return x, new_row
+
+    x, new_cache = jax.lax.scan(scan_body, x, (params["blocks"], cache))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return lm_logits(cfg, params, x), new_cache

@@ -1,0 +1,69 @@
+"""Gradient compression for cross-pod data parallelism (distributed-
+optimization trick for the 1000+-node regime).
+
+Cross-pod gradient all-reduce is DCI-bandwidth-bound; compressing the
+cross-pod reduction with error feedback (1-bit Adam / EF21 family) trades
+a cheap local correction for 2–16× less inter-pod traffic.
+
+Implementation: hook applied to grads *before* the optimizer —
+  compress → (pseudo-)all-reduce over 'pod' → decompress + error feedback.
+Inside jit/GSPMD the all-reduce emerges from psum over the pod axis when
+run under shard_map; in the plain pjit path XLA already reduced over data
+axes, so the hook degrades to quantize+dequantize with error feedback
+(accuracy-preserving, bandwidth win realized under shard_map deployment).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    kind: str = "none"          # none | bf16 | int8
+    error_feedback: bool = True
+
+
+def init_error_state(params, cfg: CompressionConfig):
+    if cfg.kind == "none" or not cfg.error_feedback:
+        return None
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+
+
+def _quant_int8(g):
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_grads(cfg: CompressionConfig, grads, err_state):
+    """Returns (compressed-then-decompressed grads, new error state).
+    The quantized representation is what crosses the pod link."""
+    if cfg.kind == "none":
+        return grads, err_state
+
+    def one(g, e):
+        g32 = g.astype(F32) + (e if e is not None else 0.0)
+        if cfg.kind == "bf16":
+            gq = g32.astype(jnp.bfloat16).astype(F32)
+        elif cfg.kind == "int8":
+            q, scale = _quant_int8(g32)
+            gq = q.astype(F32) * scale
+        else:
+            raise ValueError(cfg.kind)
+        new_e = (g32 - gq) if cfg.error_feedback else None
+        return gq.astype(g.dtype), new_e
+
+    if err_state is None:
+        flat_g, tdef = jax.tree.flatten(grads)
+        out = [one(g, None) for g in flat_g]
+        return tdef.unflatten([o[0] for o in out]), None
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(err_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (tdef.unflatten([o[0] for o in out]),
+            tdef.unflatten([o[1] for o in out]))

@@ -1,0 +1,83 @@
+"""Roofline terms from the compiled dry-run artifact (TPU v5e targets).
+
+    compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes / (chips × HBM_bw)
+    collective term = collective_bytes / (chips × link_bw)
+
+HLO_FLOPs / HLO_bytes / collective_bytes are totals over chips; our parser
+reads the per-device SPMD module, so total = per_device × chips and each
+term reduces to per_device_quantity / per_chip_rate.  MODEL_FLOPS = 6·N·D
+(dense) or 6·N_active·D (MoE) for train; 2·N·D for inference steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ArchConfig
+from . import hlo_cost
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s per ICI link
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # per-device quantities from the compiled HLO
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_by_kind: dict
+    # terms (seconds)
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float           # 6·N·D (or inference 2·N·D), global
+    hlo_flops_total: float
+    useful_ratio: float          # model_flops / hlo_flops_total
+    # memory analysis
+    bytes_args: float = 0.0
+    bytes_out: float = 0.0
+    bytes_temp: float = 0.0
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def model_flops(cfg: ArchConfig, shape_kind: str, n_tokens: float) -> float:
+    n = cfg.active_param_count()
+    if shape_kind == "train":
+        return 6.0 * n * n_tokens
+    return 2.0 * n * n_tokens
+
+
+def compute(arch: ArchConfig, shape_name: str, shape_kind: str, mesh_name: str,
+            chips: int, hlo_text: str, n_tokens: float,
+            mem_stats=None) -> Roofline:
+    c = hlo_cost.analyze(hlo_text)
+    t_comp = c.flops / PEAK_FLOPS
+    t_mem = c.bytes_accessed / HBM_BW
+    t_coll = c.coll_bytes / LINK_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    bott = max(terms, key=terms.get)
+    mf = model_flops(arch, shape_kind, n_tokens)
+    hlo_total = c.flops * chips
+    r = Roofline(
+        arch=arch.name, shape=shape_name, mesh=mesh_name, chips=chips,
+        flops_per_device=c.flops, bytes_per_device=c.bytes_accessed,
+        coll_bytes_per_device=c.coll_bytes, coll_by_kind=dict(c.coll_by_kind),
+        t_compute=t_comp, t_memory=t_mem, t_collective=t_coll,
+        bottleneck=bott, model_flops=mf, hlo_flops_total=hlo_total,
+        useful_ratio=mf / hlo_total if hlo_total else 0.0,
+    )
+    if mem_stats is not None:
+        r.bytes_args = float(mem_stats.argument_size_in_bytes)
+        r.bytes_out = float(mem_stats.output_size_in_bytes)
+        r.bytes_temp = float(mem_stats.temp_size_in_bytes)
+    return r

@@ -1,0 +1,285 @@
+"""HLO-text cost model with while-loop trip-count multiplication.
+
+XLA's ``compiled.cost_analysis()`` visits a while body ONCE (verified
+empirically: a 7-iteration scan reports 1 body's FLOPs), which silently
+under-counts every scan-over-layers model by ~n_layers×.  This parser walks
+the compiled per-device HLO text, computes
+
+  - dot/convolution FLOPs (2·|out|·K) + elementwise FLOPs,
+  - bytes accessed (operands + outputs per top-level op; fusions opaque),
+  - collective bytes per opcode (all-reduce / all-gather / reduce-scatter /
+    all-to-all / collective-permute, incl. -start forms),
+
+per computation, then folds the call graph with multiplicities:
+``while`` bodies × known_trip_count (backend_config), fusion/call/reduce
+bodies × 1, conditionals × max over branches.
+
+Validated against cost_analysis() on loop-free programs (tests).
+All numbers are per-device (the HLO is the post-SPMD per-device module).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "s4": 1, "u4": 1, "f4e2m1fn": 1,
+    "f8e8m0fnu": 1, "f8e3m4": 1, "f8e4m3b11fnuz": 1,
+}
+
+ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+    "floor", "ceil", "sign", "cosine", "sine", "logistic", "expm1",
+    "log1p", "atan2", "remainder", "cbrt", "erf",
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->\s*.+\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"(?:calls|body|to_apply|branch_computations)=%?"
+                       r"(\{[^}]*\}|[\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+
+
+def _shape_bytes_elems(type_str: str):
+    """Parse 'f32[2,3]{...}' or tuple '(f32[2], s32[])'. Returns
+    (bytes, elems_of_first_array)."""
+    total = 0
+    first_elems = None
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        elems = 1
+        if dims:
+            for d in dims.split(","):
+                elems *= int(d)
+        total += elems * DTYPE_BYTES[dt]
+        if first_elems is None:
+            first_elems = elems
+    return total, (first_elems or 0)
+
+
+@dataclasses.dataclass
+class OpInfo:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str           # operand list + attributes (raw tail of the line)
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    transcendentals: float = 0.0
+    bytes_accessed: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: dict = dataclasses.field(default_factory=dict)
+    coll_count: int = 0
+
+
+def parse_computations(hlo_text: str) -> dict:
+    """name -> list[OpInfo] (top-level ops only)."""
+    comps: dict[str, list] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        mc = _COMP_RE.match(line)
+        if mc and line.rstrip().endswith("{"):
+            cur = mc.group(1)
+            comps[cur] = []
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        mo = _OP_RE.match(line)
+        if mo:
+            comps[cur].append(OpInfo(name=mo.group(1), type_str=mo.group(2),
+                                     opcode=mo.group(3), rest=mo.group(4)))
+    return comps
+
+
+def _operand_names(rest: str) -> list:
+    """Names inside the top-level parens of `opcode(...)`."""
+    depth = 0
+    end = 0
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            if depth == 0:
+                end = i
+                break
+            depth -= 1
+    inner = rest[:end]
+    return re.findall(r"%([\w\.\-]+)", inner)
+
+
+def _dot_flops(op: OpInfo, shapes: dict) -> float:
+    _, out_elems = _shape_bytes_elems(op.type_str)
+    ops = _operand_names(op.rest)
+    if not ops:
+        return 0.0
+    lhs_shape = shapes.get(ops[0])
+    if lhs_shape is None:
+        return 0.0
+    mdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    k = 1
+    if mdims and mdims.group(1):
+        for d in mdims.group(1).split(","):
+            k *= lhs_shape[int(d)]
+    mbatch = re.search(r"lhs_batch_dims=\{([\d,]*)\}", op.rest)
+    # out already includes batch dims; flops = 2 * out * k
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(op: OpInfo, shapes: dict) -> float:
+    _, out_elems = _shape_bytes_elems(op.type_str)
+    ops = _operand_names(op.rest)
+    if len(ops) < 2:
+        return 0.0
+    ker = shapes.get(ops[1])
+    if ker is None:
+        return 0.0
+    # rough: 2 * out * prod(kernel dims except output-feature dim)
+    kprod = 1
+    for d in ker:
+        kprod *= d
+    mdim = re.search(r"dim_labels=[\w\?]*_([\w\?]*)->", op.rest)
+    out_feat = 1
+    if mdim:
+        lab = mdim.group(1)
+        pos = lab.find("o")
+        if pos >= 0:
+            out_feat = ker[pos]
+    return 2.0 * out_elems * kprod / max(out_feat, 1)
+
+
+def _shapes_table(ops: list) -> dict:
+    table = {}
+    for op in ops:
+        dims = []
+        m = _SHAPE_RE.search(op.type_str)
+        if m:
+            dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+        table[op.name] = dims
+    return table
+
+
+def analyze(hlo_text: str, entry: str | None = None) -> CompCost:
+    comps = parse_computations(hlo_text)
+    if not comps:
+        return CompCost()
+    if entry is None:
+        m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", hlo_text, flags=re.M)
+        entry = m.group(1) if m else next(iter(comps))
+    memo: dict[str, CompCost] = {}
+
+    def comp_cost(name: str) -> CompCost:
+        if name in memo:
+            return memo[name]
+        memo[name] = CompCost()           # cycle guard
+        ops = comps.get(name, [])
+        shapes = _shapes_table(ops)
+        info = {op.name: _shape_bytes_elems(op.type_str) for op in ops}
+        c = CompCost(coll_by_kind=defaultdict(float))
+        for op in ops:
+            out_bytes, out_elems = _shape_bytes_elems(op.type_str)
+            opnames = _operand_names(op.rest)
+            in_bytes = sum(info[on][0] for on in opnames if on in info)
+            opc = op.opcode
+            if opc in ("parameter", "constant", "get-tuple-element", "tuple",
+                       "bitcast", "after-all"):
+                continue
+            if opc in ("gather", "dynamic-slice"):
+                # only touched elements move (not the whole operand); XLA's
+                # own cost model has the same full-operand overcount.
+                idx_bytes = sum(info[on][0] for on in opnames[1:] if on in info)
+                c.bytes_accessed += 2 * out_bytes + idx_bytes
+            elif opc in ("scatter", "dynamic-update-slice"):
+                upd = (info[opnames[-1]][0]
+                       if opnames and opnames[-1] in info else out_bytes)
+                c.bytes_accessed += 3 * upd   # read+write target region + upd
+            else:
+                c.bytes_accessed += in_bytes + out_bytes
+            if opc == "dot":
+                c.flops += _dot_flops(op, shapes)
+            elif opc == "convolution":
+                c.flops += _conv_flops(op, shapes)
+            elif opc in ELEMENTWISE:
+                c.flops += out_elems
+                if opc in ("exponential", "log", "tanh", "rsqrt", "sqrt",
+                           "power", "logistic", "cosine", "sine", "erf"):
+                    c.transcendentals += out_elems
+            elif opc == "reduce" or opc == "reduce-window":
+                c.flops += sum(info[on][1] for on in opnames[:1] if on in info)
+            base = opc[:-6] if opc.endswith("-start") else opc
+            if base in COLLECTIVES:
+                cb = in_bytes
+                c.coll_bytes += cb
+                c.coll_by_kind[base] += cb
+                c.coll_count += 1
+            # called computations
+            trip = 1
+            if opc == "while":
+                mt = _TRIP_RE.search(op.rest)
+                trip = int(mt.group(1)) if mt else 1
+                mb = re.search(r"body=%?([\w\.\-]+)", op.rest)
+                if mb and mb.group(1) in comps:
+                    _fold(c, comp_cost(mb.group(1)), trip)
+                mc2 = _COND_RE.search(op.rest)
+                if mc2 and mc2.group(1) in comps:
+                    _fold(c, comp_cost(mc2.group(1)), trip + 1)
+            elif opc == "fusion":
+                mcalls = re.search(r"calls=%?([\w\.\-]+)", op.rest)
+                if mcalls and mcalls.group(1) in comps:
+                    sub = comp_cost(mcalls.group(1))
+                    # fusion: flops inside count; bytes stay opaque (already
+                    # counted as operands+output above)
+                    c.flops += sub.flops
+                    c.transcendentals += sub.transcendentals
+                    _fold_coll(c, sub, 1)
+            elif opc in ("call", "custom-call", "reduce", "sort", "scatter",
+                         "select-and-scatter", "map", "reduce-window"):
+                mcalls = re.search(r"(?:calls|to_apply)=%?([\w\.\-]+)", op.rest)
+                if mcalls and mcalls.group(1) in comps:
+                    sub = comp_cost(mcalls.group(1))
+                    _fold_coll(c, sub, 1)
+            elif opc == "conditional":
+                mbr = re.search(r"branch_computations=\{([^}]*)\}", op.rest)
+                if mbr:
+                    subs = [comp_cost(b.strip().lstrip("%"))
+                            for b in mbr.group(1).split(",")]
+                    if subs:
+                        best = max(subs, key=lambda s: s.flops)
+                        _fold(c, best, 1)
+        memo[name] = c
+        return c
+
+    def _fold(dst: CompCost, src: CompCost, mult: int):
+        dst.flops += src.flops * mult
+        dst.transcendentals += src.transcendentals * mult
+        dst.bytes_accessed += src.bytes_accessed * mult
+        _fold_coll(dst, src, mult)
+
+    def _fold_coll(dst: CompCost, src: CompCost, mult: int):
+        dst.coll_bytes += src.coll_bytes * mult
+        dst.coll_count += src.coll_count * mult
+        for k2, v2 in src.coll_by_kind.items():
+            dst.coll_by_kind[k2] = dst.coll_by_kind.get(k2, 0.0) + v2 * mult
+
+    total = comp_cost(entry)
+    total.coll_by_kind = dict(total.coll_by_kind)
+    return total

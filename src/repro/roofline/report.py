@@ -1,0 +1,82 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from dryrun JSON.
+
+    PYTHONPATH=src python -m repro.roofline.report artifacts/dryrun/dryrun_single_multi.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_s(x):
+    if x is None:
+        return "—"
+    if x < 1e-3:
+        return f"{x*1e6:.0f}µs"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def render(records, mesh_filter="pod16x16"):
+    lines = []
+    lines.append("| arch | shape | t_compute | t_memory | t_collective | "
+                 "bottleneck | HLO flops/dev | useful ratio | temp GiB |")
+    lines.append("|---|---|---|---|---|---|---|---|---|")
+    for r in records:
+        if r.get("status") != "ok" or r.get("mesh") != mesh_filter:
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['t_compute'])} | "
+            f"{fmt_s(r['t_memory'])} | {fmt_s(r['t_collective'])} | "
+            f"**{r['bottleneck']}** | {r['flops_per_device']:.2e} | "
+            f"{r['useful_ratio']:.2f} | {r['mem_temp_gib']:.2f} |")
+    skips = [r for r in records if r.get("status") == "skipped"
+             and r.get("mesh") == mesh_filter]
+    if skips:
+        lines.append("")
+        lines.append("Skipped cells (documented in DESIGN.md "
+                     "§Arch-applicability):")
+        for r in skips:
+            lines.append(f"- {r['arch']} × {r['shape']}")
+    return "\n".join(lines)
+
+
+def render_dryrun_summary(records):
+    n_ok = sum(1 for r in records if r.get("status") == "ok")
+    n_skip = sum(1 for r in records if r.get("status") == "skipped")
+    n_err = len(records) - n_ok - n_skip
+    lines = [f"Cells: {n_ok} compiled ok, {n_skip} documented skips, "
+             f"{n_err} errors."]
+    lines.append("")
+    lines.append("| arch | shape | mesh | compile s | temp GiB | args GiB | "
+                 "coll bytes/dev | coll ops |")
+    lines.append("|---|---|---|---|---|---|---|---|")
+    for r in records:
+        if r.get("status") != "ok":
+            continue
+        kinds = r.get("coll_by_kind", {})
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r.get('t_compile_s', 0):.1f} | {r['mem_temp_gib']:.2f} | "
+            f"{r.get('mem_args_gib', 0):.2f} | "
+            f"{r['coll_bytes_per_device']:.2e} | "
+            f"{'+'.join(k for k in sorted(kinds))} |")
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    path = (argv or sys.argv[1:])[0]
+    with open(path) as f:
+        records = json.load(f)
+    print("## §Dry-run\n")
+    print(render_dryrun_summary(records))
+    print("\n## §Roofline (single-pod 16×16, per cell)\n")
+    print(render(records, "pod16x16"))
+    print("\n## §Roofline (multi-pod 2×16×16)\n")
+    print(render(records, "pod2x16x16"))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,66 @@
+"""Serving steps: prefill (build KV caches, return last-token logits) and
+decode (one token against the cache).  Both are pure and jit-able; the
+launcher applies shardings.  Batched requests = the batch dimension.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+
+
+def make_prefill_step(cfg: ArchConfig, s_max: int | None = None):
+    """prefill(params, tokens/embeds/positions) -> (last_logits, cache).
+    Cache is padded to s_max capacity (defaults to prompt length)."""
+
+    def prefill(params, tokens=None, embeds=None, positions=None):
+        hidden, _, caches = T.forward(cfg, params, tokens=tokens,
+                                      embeds=embeds, positions=positions,
+                                      collect_cache=True)
+        logits = T.lm_logits(cfg, params, hidden[:, -1:, :])
+        if s_max is not None:
+            kinds = cfg.layer_kinds()
+
+            def pad_kv(leaf):             # (np, B, S, Hkv, hd) → capacity
+                s = leaf.shape[2]
+                if s < s_max:
+                    return jnp.pad(leaf, ((0, 0), (0, 0), (0, s_max - s),
+                                          (0, 0), (0, 0)))
+                return leaf
+
+            caches = [jax.tree.map(pad_kv, c) if kinds[i] == "attn" else c
+                      for i, c in enumerate(caches)]
+        return logits, caches
+
+    return prefill
+
+
+def make_decode_step(cfg: ArchConfig):
+    """decode(params, tokens, cache, pos, [embeds, positions]) ->
+    (logits (B,1,V), new cache)."""
+
+    def decode(params, tokens, cache, pos, embeds=None, positions=None):
+        return T.decode_step(cfg, params, tokens, cache, pos,
+                             embeds=embeds, positions=positions)
+
+    return decode
+
+
+def greedy_generate(cfg: ArchConfig, params, prompt_tokens, n_new: int,
+                    s_max: int | None = None):
+    """Simple host-driven greedy loop (example/testing utility)."""
+    b, s = prompt_tokens.shape
+    s_max = s_max or (s + n_new)
+    prefill = make_prefill_step(cfg, s_max=s_max)
+    decode = jax.jit(make_decode_step(cfg))
+    logits, cache = prefill(params, tokens=prompt_tokens)
+    out = [jnp.argmax(logits[:, -1, :], axis=-1)]
+    pos = s
+    for _ in range(n_new - 1):
+        logits, cache = decode(params, out[-1][:, None], cache,
+                               jnp.asarray(pos, jnp.int32))
+        out.append(jnp.argmax(logits[:, -1, :], axis=-1))
+        pos += 1
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,86 @@
+"""train_step / loss: next-token CE (+ MoE aux), remat, microbatching.
+
+The returned step functions are pure and jit-able; the launcher applies
+in/out shardings.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+from repro.optim import adamw
+from repro.optim.compression import CompressionConfig, compress_grads
+
+F32 = jnp.float32
+
+MOE_LB_COEF = 0.01
+MOE_Z_COEF = 1e-3
+
+
+def loss_fn(cfg: ArchConfig, params, batch, seq_chunk=512, constrain=None):
+    hidden, aux, _ = T.forward(
+        cfg, params,
+        tokens=batch.get("tokens"),
+        embeds=batch.get("embeds"),
+        positions=batch.get("positions"),
+        constrain=constrain,
+    )
+    loss = T.ce_loss_chunked(cfg, params, hidden, batch["labels"],
+                             seq_chunk=seq_chunk)
+    total = loss
+    if "moe_lb" in aux:
+        total = total + MOE_LB_COEF * aux["moe_lb"] / cfg.n_layers
+        total = total + MOE_Z_COEF * aux["moe_z"] / cfg.n_layers
+    return total, dict(ce=loss, **aux)
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
+                    comp_cfg: CompressionConfig | None = None,
+                    microbatch: int = 1, seq_chunk: int = 512,
+                    constrain=None):
+    """Returns step(params, opt_state, err_state, batch) ->
+    (params, opt_state, err_state, metrics)."""
+    comp_cfg = comp_cfg or CompressionConfig()
+
+    def grads_of(params, batch):
+        (l, metrics), g = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, seq_chunk, constrain),
+            has_aux=True)(params)
+        return l, metrics, g
+
+    def step(params, opt_state, err_state, batch):
+        if microbatch > 1:
+            # gradient accumulation over microbatches (sequential scan keeps
+            # peak activation memory at 1/microbatch)
+            def split(x):
+                b = x.shape[0] if x.ndim >= 1 else None
+                if x.ndim == 3 and x.shape[0] == 3:      # (3,B,S) positions
+                    return jnp.moveaxis(
+                        x.reshape(3, microbatch, -1, *x.shape[2:]), 1, 0)
+                return x.reshape(microbatch, -1, *x.shape[1:])
+            mb = {k: split(v) for k, v in batch.items()}
+
+            def acc_body(carry, mbatch):
+                g_acc, l_acc = carry
+                l, metrics, g = grads_of(params, mbatch)
+                g_acc = jax.tree.map(lambda a, b: a + b, g_acc, g)
+                return (g_acc, l_acc + l), metrics
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+            (g, lsum), metrics = jax.lax.scan(acc_body, (g0, 0.0), mb)
+            g = jax.tree.map(lambda x: x / microbatch, g)
+            loss = lsum / microbatch
+            metrics = jax.tree.map(lambda x: x[-1], metrics)
+        else:
+            loss, metrics, g = grads_of(params, batch)
+
+        g, err_state = compress_grads(comp_cfg, g, err_state)
+        params, opt_state, opt_m = adamw.apply_updates(
+            opt_cfg, params, g, opt_state)
+        metrics = dict(loss=loss, **metrics, **opt_m)
+        return params, opt_state, err_state, metrics
+
+    return step

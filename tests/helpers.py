@@ -1,0 +1,16 @@
+import numpy as np
+import scipy.sparse as sp
+
+from repro.core.matrix import CSR
+
+
+def random_system(n, density, seed, kind="general"):
+    """Deterministic random nonsingular sparse system."""
+    rng = np.random.default_rng(seed)
+    a = sp.random(n, n, density=density,
+                  random_state=np.random.RandomState(seed), format="csr")
+    a = a + sp.diags(rng.uniform(1.0, 3.0 if kind == "circuit" else 2.0, n)
+                     * rng.choice([-1, 1], n))
+    a = a.tocsr()
+    b = rng.normal(size=n)
+    return CSR.from_scipy(a), a, b

@@ -1,0 +1,143 @@
+"""Per-Pallas-kernel shape/dtype sweeps vs the pure-jnp ref.py oracles
+(interpret=True executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+RNG = np.random.default_rng(42)
+
+
+def _tri(k, dtype):
+    u = RNG.normal(size=(k, k))
+    return jnp.asarray(np.triu(u) + 3 * np.eye(k), dtype)
+
+
+TRISOLVE_SHAPES = [(1, 3), (5, 8), (17, 13), (40, 32), (3, 1)]
+
+
+@pytest.mark.parametrize("nr,k", TRISOLVE_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float64, jnp.float32])
+def test_trisolve(nr, k, dtype):
+    from repro.kernels.trisolve import ops
+    from repro.kernels.trisolve.ref import trsm_upper_ref
+    u = _tri(k, dtype)
+    x = jnp.asarray(RNG.normal(size=(nr, k)), dtype)
+    y = ops.trsm(u, x)
+    yr = trsm_upper_ref(u, x)
+    tol = 1e-10 if dtype == jnp.float64 else 1e-4
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=tol,
+                               rtol=tol)
+
+
+SUPSUP_SHAPES = [(5, 3, 7), (16, 8, 40), (33, 13, 5), (2, 1, 3), (8, 8, 128)]
+
+
+@pytest.mark.parametrize("nr,k,m", SUPSUP_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float64, jnp.float32])
+def test_supsup(nr, k, m, dtype):
+    from repro.kernels.supsup import ops
+    from repro.kernels.supsup.ref import supsup_update_ref
+    x = jnp.asarray(RNG.normal(size=(nr, k + m)), dtype)
+    src = jnp.asarray(RNG.normal(size=(k, k + m)), dtype)
+    src = src.at[:, :k].set(_tri(k, dtype))
+    lts, xr = ops.supsup_update(x, src, k)
+    ltr, xrr = supsup_update_ref(x, src, k)
+    tol = 1e-10 if dtype == jnp.float64 else 1e-4
+    np.testing.assert_allclose(np.asarray(lts), np.asarray(ltr), atol=tol,
+                               rtol=tol)
+    np.testing.assert_allclose(np.asarray(xr), np.asarray(xrr), atol=tol,
+                               rtol=tol)
+
+
+@pytest.mark.parametrize("k,m", [(3, 7), (8, 40), (13, 5), (1, 9), (32, 200)])
+@pytest.mark.parametrize("dtype", [jnp.float64, jnp.float32])
+def test_suprow(k, m, dtype):
+    from repro.kernels.suprow import ops
+    from repro.kernels.suprow.ref import suprow_update_ref
+    x = jnp.asarray(RNG.normal(size=(k + m,)), dtype)
+    src = jnp.asarray(RNG.normal(size=(k, k + m)), dtype)
+    src = src.at[:, :k].set(_tri(k, dtype))
+    y, xr = ops.suprow_update(x, src, k)
+    yr, xrr = suprow_update_ref(x, src, k)
+    tol = 1e-10 if dtype == jnp.float64 else 1e-4
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=tol,
+                               rtol=tol)
+    np.testing.assert_allclose(np.asarray(xr), np.asarray(xrr), atol=tol,
+                               rtol=tol)
+
+
+@pytest.mark.parametrize("nr,ls,us", [(4, 2, 3), (16, 5, 9), (1, 0, 4),
+                                      (8, 0, 0), (32, 7, 40)])
+def test_panel_lu(nr, ls, us):
+    from repro.kernels.panel import ops
+    from repro.kernels.panel.ref import panel_lu_ref
+    w = ls + nr + us
+    p = jnp.asarray(RNG.normal(size=(nr, w)))
+    o, pm, nper = ops.panel_lu(p, nr, ls, 1e-10)
+    orf, pmr, nperr = panel_lu_ref(p, nr, ls, jnp.asarray(1e-10))
+    np.testing.assert_allclose(np.asarray(o), np.asarray(orf), atol=1e-11)
+    assert np.array_equal(np.asarray(pm), np.asarray(pmr))
+    assert int(nper) == int(nperr)
+
+
+def test_panel_lu_perturbation_counts():
+    from repro.kernels.panel import ops
+    p = jnp.zeros((4, 6)).at[:, 1:5].set(jnp.eye(4) * 1e-30)
+    p = p.at[0, 1].set(2.0)
+    o, pm, nper = ops.panel_lu(p, 4, 1, 1e-8)
+    assert int(nper) == 3          # three tiny pivots perturbed
+
+
+FLASH_CASES = [(2, 4, 2, 64, 32, True), (1, 8, 8, 96, 64, True),
+               (2, 4, 1, 40, 16, True), (1, 2, 2, 50, 32, False),
+               (1, 4, 4, 130, 64, True)]
+
+
+@pytest.mark.parametrize("b,hq,hkv,t,d,causal", FLASH_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(b, hq, hkv, t, d, causal, dtype):
+    from repro.kernels.flashattn.kernel import flash_attention
+    from repro.kernels.flashattn.ref import attention_ref
+    q = jnp.asarray(RNG.normal(size=(b, hq, t, d)), dtype)
+    k = jnp.asarray(RNG.normal(size=(b, hkv, t, d)), dtype)
+    v = jnp.asarray(RNG.normal(size=(b, hkv, t, d)), dtype)
+    o = flash_attention(q, k, v, bq=32, bk=32, causal=causal)
+    orf = attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                        v.astype(jnp.float32), causal=causal)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(o, np.float32), np.asarray(orf),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_matches_chunked_xla():
+    """The pure-XLA chunked attention and the Pallas kernel agree."""
+    from repro.kernels.flashattn.kernel import flash_attention
+    from repro.models.layers import _chunked_causal_attention
+    b, h, hkv, t, d = 2, 4, 2, 96, 32
+    q = jnp.asarray(RNG.normal(size=(b, t, h, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, t, hkv, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, t, hkv, d)), jnp.float32)
+    o_xla = _chunked_causal_attention(q, k, v, chunk_k=32)
+    o_pl = flash_attention(jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1),
+                           jnp.moveaxis(v, 2, 1), bq=32, bk=32)
+    np.testing.assert_allclose(np.asarray(o_xla),
+                               np.asarray(jnp.moveaxis(o_pl, 1, 2)),
+                               atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("bh,t,hs,bt", [(4, 64, 16, 16), (2, 100, 32, 32),
+                                        (6, 33, 8, 16), (1, 256, 64, 64)])
+def test_wkv_kernel(bh, t, hs, bt):
+    """RWKV6 WKV recurrence: VMEM-resident-state kernel vs scan oracle."""
+    from repro.kernels.wkv.ops import wkv_padded
+    from repro.kernels.wkv.ref import wkv_ref
+    r = jnp.asarray(RNG.normal(size=(bh, t, hs)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(bh, t, hs)), jnp.float32) * 0.3
+    v = jnp.asarray(RNG.normal(size=(bh, t, hs)), jnp.float32)
+    w = jnp.asarray(RNG.uniform(0.7, 0.999, size=(bh, t, hs)), jnp.float32)
+    u = jnp.asarray(RNG.normal(size=(bh, hs)) * 0.3, jnp.float32)
+    y = wkv_padded(r, k, v, w, u, bt=bt)
+    yr, _ = wkv_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-4,
+                               rtol=2e-4)

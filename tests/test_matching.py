@@ -1,0 +1,65 @@
+"""MC64 matching + scaling invariants (paper §2.1 static pivoting)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.matrix import CSR
+from repro.core.matching import max_weight_matching, apply_static_pivoting
+
+
+def _random_nonsingular(rng, n, density):
+    a = np.where(rng.random((n, n)) < density, rng.normal(size=(n, n)), 0.0)
+    p = rng.permutation(n)
+    a[np.arange(n), p] += rng.uniform(0.5, 2.0, n) * rng.choice([-1, 1], n)
+    return a
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_matching_permutation_and_scaling(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(5, 80))
+    a = _random_nonsingular(rng, n, float(rng.uniform(0.05, 0.35)))
+    m = max_weight_matching(CSR.from_dense(a))
+    assert sorted(m.col_of_row.tolist()) == list(range(n))
+    b, q = apply_static_pivoting(CSR.from_dense(a), m)
+    bd = b.to_dense()
+    assert np.all(np.abs(np.diag(bd)) > 1 - 1e-8)      # matched entries → ±1
+    assert np.abs(bd).max() <= 1 + 1e-8                # off-diag bounded
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(4, 40), st.floats(0.05, 0.5))
+def test_matching_hypothesis(seed, n, density):
+    rng = np.random.default_rng(seed)
+    a = _random_nonsingular(rng, n, density)
+    A = CSR.from_dense(a)
+    m = max_weight_matching(A)
+    # permutation validity
+    assert sorted(m.col_of_row.tolist()) == list(range(n))
+    # scaling bound: |Dr A Dc| <= 1 everywhere, == 1 on matched entries
+    b, _ = apply_static_pivoting(A, m)
+    bd = np.abs(b.to_dense())
+    assert bd.max() <= 1 + 1e-8
+    assert np.all(np.abs(np.diag(bd)) > 1 - 1e-8)
+    # scales strictly positive and finite
+    assert np.all(np.isfinite(m.row_scale)) and np.all(m.row_scale > 0)
+    assert np.all(np.isfinite(m.col_scale)) and np.all(m.col_scale > 0)
+
+
+def test_matching_improves_diagonal_product():
+    """The matching maximizes the diagonal product; compare vs identity."""
+    rng = np.random.default_rng(3)
+    n = 30
+    a = _random_nonsingular(rng, n, 0.3)
+    A = CSR.from_dense(a)
+    m = max_weight_matching(A)
+    matched = np.abs(a[np.arange(n), m.col_of_row])
+    assert np.all(matched > 0)  # matched entries structurally nonzero
+
+
+def test_structurally_singular_handled():
+    a = np.zeros((4, 4))
+    a[0, 0] = a[1, 1] = a[2, 2] = 1.0   # row/col 3 empty
+    m = max_weight_matching(CSR.from_dense(a))
+    assert m.structurally_singular
+    assert sorted(m.col_of_row.tolist()) == list(range(4))

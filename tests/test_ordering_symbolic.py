@@ -1,0 +1,122 @@
+"""Ordering + symbolic factorization + supernode invariants (§2.1)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.matrix import CSR
+from repro.core.ordering import (min_degree, rcm, nested_dissection,
+                                 select_ordering)
+from repro.core.symbolic import (etree, etree_col_counts, symbolic_factorize,
+                                 symbolic_stats)
+
+
+def _sym_pattern(rng, n, density):
+    a = (rng.random((n, n)) < density).astype(float)
+    a = a + a.T + np.eye(n)
+    return CSR.from_dense(a)
+
+
+@pytest.mark.parametrize("fn", [min_degree, rcm, nested_dissection])
+def test_orderings_are_permutations(fn):
+    rng = np.random.default_rng(0)
+    for n in (5, 23, 64):
+        pat = _sym_pattern(rng, n, 0.1)
+        p = fn(pat)
+        assert sorted(p.tolist()) == list(range(n))
+
+
+def test_fill_reduction_beats_natural_on_arrow():
+    """Arrowhead matrix: natural order fills completely; MD keeps it sparse."""
+    n = 60
+    a = np.eye(n)
+    a[0, :] = 1.0
+    a[:, 0] = 1.0
+    pat = CSR.from_dense(a)
+    cc_nat = etree_col_counts(pat)
+    p = min_degree(pat)
+    cc_md = etree_col_counts(pat.permute(p, p))
+    assert cc_md.sum() < cc_nat.sum() / 3
+
+
+def test_select_ordering_picks_min_flops():
+    rng = np.random.default_rng(1)
+    pat = _sym_pattern(rng, 50, 0.08)
+    perm, name, scores = select_ordering(pat, return_all=True)
+    flops = {k: v[0] for k, v in scores.items()}
+    assert flops[name] == min(flops.values())
+
+
+def _dense_fill(pat: CSR):
+    """Oracle: symbolic Cholesky fill via dense elimination on the pattern."""
+    n = pat.n
+    a = pat.to_dense() != 0
+    l = np.zeros((n, n), dtype=bool)
+    for j in range(n):
+        struct = a[:, j].copy()
+        struct[:j + 1] = False
+        l[j, j] = True
+        l[struct, j] = True
+        rows = np.where(struct)[0]
+        for r in rows:
+            a[rows, r] = True  # clique fill (symmetric)
+            a[r, rows] = True
+    return l
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 1000), st.integers(4, 28), st.floats(0.08, 0.4))
+def test_symbolic_matches_dense_oracle(seed, n, density):
+    rng = np.random.default_rng(seed)
+    pat = _sym_pattern(rng, n, density)
+    sym = symbolic_factorize(pat, relax=0, max_super=1, do_supernodes=False)
+    l_oracle = _dense_fill(pat)
+    for i in range(n):
+        got = set(sym.lrow_struct(i).tolist())
+        want = set(np.where(l_oracle[i, :i])[0].tolist())
+        assert got == want, (i, got, want)
+    # column counts consistent
+    cc = etree_col_counts(pat)
+    assert np.array_equal(cc, l_oracle.sum(axis=0))
+
+
+def test_supernodes_partition_and_structure():
+    rng = np.random.default_rng(2)
+    pat = _sym_pattern(rng, 80, 0.15)
+    sym = symbolic_factorize(pat, relax=0, max_super=32)
+    # partition covers all rows exactly once
+    cover = np.zeros(80, dtype=int)
+    for t in range(sym.n_nodes):
+        s, e = sym.node_rows(t)
+        cover[s:e] += 1
+    assert np.all(cover == 1)
+    # fundamental supernodes: identical U structure beyond the block
+    for t in range(sym.n_nodes):
+        s, e = sym.node_rows(t)
+        if e - s < 2:
+            continue
+        base = set(sym.urow_struct(e - 1).tolist())
+        for j in range(s, e - 1):
+            got = set(sym.urow_struct(j).tolist()) - set(range(j + 1, e))
+            assert got == base, (t, j)
+
+
+def test_etree_parent_is_min_struct():
+    """parent[j] = min row index in struct(L col j) below j."""
+    rng = np.random.default_rng(4)
+    pat = _sym_pattern(rng, 40, 0.12)
+    parent = etree(pat)
+    sym = symbolic_factorize(pat, do_supernodes=False)
+    for j in range(40):
+        s = sym.urow_struct(j)
+        if len(s):
+            assert parent[j] == s[0]
+        else:
+            assert parent[j] == -1
+
+
+def test_stats_shape():
+    rng = np.random.default_rng(5)
+    pat = _sym_pattern(rng, 50, 0.1)
+    sym = symbolic_factorize(pat)
+    st_ = symbolic_stats(sym)
+    assert st_["flops"] > 0 and 0 <= st_["supernode_coverage"] <= 1

@@ -1,0 +1,106 @@
+"""Property tests on the FactorPlan — the paper's core data structure.
+
+Invariants (hypothesis over random sparse systems):
+  - panel slots partition the storage exactly (no overlap, no gaps);
+  - every edge's col_map hits real pattern positions of the target;
+  - edges reference only earlier nodes (DAG), sources ascend;
+  - levelization is a topological schedule (dual-mode split consistent);
+  - A-scatter positions are unique and in-range;
+  - plan flops accounting: useful ≤ padded.
+"""
+import numpy as np
+import scipy.sparse as sp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.api import HyluOptions, analyze
+from repro.core.matrix import CSR
+
+
+def _analysis(seed, n, density, mode):
+    rng = np.random.default_rng(seed)
+    a = sp.random(n, n, density=density,
+                  random_state=np.random.RandomState(seed), format="csr")
+    a = a + sp.diags(rng.uniform(1, 2, n) * rng.choice([-1, 1], n))
+    return analyze(CSR.from_scipy(a.tocsr()), HyluOptions(force_mode=mode))
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10_000), st.integers(10, 80), st.floats(0.03, 0.2),
+       st.sampled_from(["rowrow", "hybrid", "supernodal"]))
+def test_plan_invariants(seed, n, density, mode):
+    an = _analysis(seed, n, density, mode)
+    plan = an.plan
+
+    # --- panel layout partitions storage ---------------------------------
+    total = 0
+    for nd in plan.nodes:
+        off = plan.panel_offset[nd.nid]
+        assert off == total
+        total += nd.nr * nd.width
+    assert total == plan.total_slots
+
+    # --- rows partition [0, n) ------------------------------------------
+    covered = np.concatenate([np.arange(nd.r0, nd.r1) for nd in plan.nodes])
+    assert np.array_equal(np.sort(covered), np.arange(plan.n))
+
+    # --- patterns sorted; block present; edges consistent -----------------
+    level = np.zeros(plan.n_nodes, dtype=int)
+    for nd in plan.nodes:
+        pat = nd.pattern
+        assert np.all(np.diff(pat) > 0)
+        assert np.array_equal(pat[nd.lsize:nd.lsize + nd.nr],
+                              np.arange(nd.r0, nd.r1))
+        prev_src = -1
+        for e in nd.edges:
+            assert prev_src < e.src < nd.nid        # DAG + ascending
+            prev_src = e.src
+            snd = plan.nodes[e.src]
+            src_cols = snd.pattern[np.searchsorted(snd.pattern, snd.r0):]
+            # col_map maps exactly the source block+U cols into the target
+            assert len(e.col_map) == len(src_cols)
+            assert np.array_equal(pat[e.col_map], src_cols)
+            level[nd.nid] = max(level[nd.nid], level[e.src] + 1)
+        assert level[nd.nid] == nd.level            # topological levels
+
+    # --- dual-mode schedule covers all nodes once -------------------------
+    sched = np.concatenate(plan.levels) if plan.levels else np.empty(0, int)
+    assert np.array_equal(np.sort(sched), np.arange(plan.n_nodes))
+    assert 0 <= plan.n_bulk_levels <= len(plan.levels)
+
+    # --- A-scatter unique + in-range --------------------------------------
+    assert len(np.unique(plan.a_scatter)) == len(plan.a_scatter)
+    assert plan.a_scatter.min() >= 0
+    assert plan.a_scatter.max() < plan.total_slots
+
+    # --- flops accounting --------------------------------------------------
+    assert plan.useful_flops <= plan.padded_flops + 1e-6
+    if mode == "rowrow":
+        # width-1 nodes: no padding waste by construction
+        assert abs(plan.useful_flops - plan.padded_flops) < 1e-6
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000), st.integers(12, 60), st.floats(0.05, 0.25))
+def test_solve_structure_invariants(seed, n, density):
+    from repro.core.structure import build_solve_structure
+    an = _analysis(seed, n, density, "hybrid")
+    ss = build_solve_structure(an.plan)
+    # L forward schedule: every row finalized exactly once, deps point to
+    # already-finalized rows
+    seen = np.zeros(n, dtype=bool)
+    for rows, cols, slot, seg in zip(ss.l_fwd.rows, ss.l_fwd.cols,
+                                     ss.l_fwd.slot, ss.l_fwd.seg):
+        if len(cols):
+            assert seen[cols].all()
+        assert not seen[rows].any()
+        seen[rows] = True
+        assert (slot < an.plan.total_slots).all()
+    assert seen.all()
+    # U backward: reverse dependency direction
+    seen = np.zeros(n, dtype=bool)
+    for rows, cols, slot, seg in zip(ss.u_bwd.rows, ss.u_bwd.cols,
+                                     ss.u_bwd.slot, ss.u_bwd.seg):
+        if len(cols):
+            assert seen[cols].all()
+        seen[rows] = True
+    assert seen.all()

@@ -1,0 +1,123 @@
+"""End-to-end solver correctness: HYLU vs scipy (SuperLU), all kernel modes,
+refactorization, iterative refinement, residual properties (§2, Figs 5–11)."""
+import numpy as np
+import pytest
+import scipy.sparse as sp
+import scipy.sparse.linalg as spla
+from hypothesis import given, settings, strategies as st
+
+from repro.core.matrix import CSR
+from repro.core.api import (HyluOptions, analyze, factor, refactor, solve,
+                            solve_system, _m_values)
+from repro.core.ref_engine import extract_lu
+from repro.core import baselines
+
+from tests.helpers import random_system
+
+MODES = [None, "rowrow", "hybrid", "supernodal"]
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_solve_matches_scipy(mode, seed):
+    Ac, a_sp, b = random_system(150, 0.04, seed)
+    x_ref = spla.spsolve(a_sp.tocsc(), b)
+    x, info = solve_system(Ac, b, HyluOptions(force_mode=mode))
+    assert info["residual"] < 1e-10
+    assert np.abs(x - x_ref).max() / (np.abs(x_ref).max() + 1e-30) < 1e-6
+
+
+def test_lu_reconstruction():
+    Ac, _, _ = random_system(120, 0.05, 7)
+    an = analyze(Ac)
+    st_ = factor(an, Ac)
+    l, u = extract_lu(st_.factors)
+    m = _m_values(an, Ac).to_dense()
+    rec = l.to_dense() @ u.to_dense()
+    assert np.abs(rec - m[st_.factors.inode_perm, :]).max() < 1e-9
+
+
+def test_refactor_same_pattern():
+    Ac, a_sp, b = random_system(100, 0.05, 3)
+    an = analyze(Ac)
+    st_ = factor(an, Ac)
+    rng = np.random.default_rng(0)
+    a2 = a_sp.copy()
+    a2.data = a2.data * rng.uniform(0.5, 2.0, a2.nnz)
+    st2 = refactor(st_, CSR.from_scipy(a2.tocsr()))
+    x, info = solve(st2, b)
+    x_ref = spla.spsolve(a2.tocsc(), b)
+    assert info["residual"] < 1e-10
+    assert np.abs(x - x_ref).max() / np.abs(x_ref).max() < 1e-6
+
+
+def test_refactor_plan_is_reused():
+    Ac, _, _ = random_system(80, 0.06, 9)
+    an = analyze(Ac)
+    st_ = factor(an, Ac)
+    st2 = refactor(st_, Ac)
+    assert st2.analysis is st_.analysis          # analysis shared, not rebuilt
+    assert np.abs(st2.factors.vals - st_.factors.vals).max() < 1e-14
+
+
+def test_pivot_perturbation_and_refinement():
+    """A tiny pivot that static pivoting can't avoid triggers perturbation +
+    iterative refinement recovers a residual comparable to a dense solve
+    (§2.2/§2.3 — like the paper's Hamrle3 case, accuracy is bounded by the
+    condition number, not by the solver)."""
+    rng = np.random.default_rng(11)
+    n = 40
+    a = np.where(rng.random((n, n)) < 0.2, rng.normal(size=(n, n)), 0.0)
+    a += np.diag(rng.uniform(1, 2, n))
+    # make one row a near-duplicate → tiny pivot somewhere
+    a[7, :] = a[3, :] + 1e-10 * rng.normal(size=n)
+    b = rng.normal(size=n)
+    x, info = solve_system(CSR.from_dense(a), b)
+    assert info["n_perturb"] >= 1           # perturbation fired
+    assert info["n_refine"] >= 1            # refinement engaged
+    resid = np.abs(a @ x - b).sum() / np.abs(b).sum()
+    # accuracy is condition-limited (cond ~1e10+, like the paper's Hamrle3
+    # case); require a usable residual, not machine precision
+    assert resid < 5e-2
+
+
+def test_residual_metric_matches_paper_definition():
+    Ac, a_sp, b = random_system(60, 0.08, 5)
+    x, info = solve_system(Ac, b)
+    resid = np.abs(a_sp @ x - b).sum() / np.abs(b).sum()
+    assert abs(resid - info["residual"]) < 1e-12 + 0.1 * resid
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.integers(10, 90),
+       st.floats(0.03, 0.2), st.sampled_from(["rowrow", "hybrid"]))
+def test_solver_property(seed, n, density, mode):
+    """Property: for any nonsingular system, residual < 1e-8 and the solve
+    agrees with a dense solve."""
+    rng = np.random.default_rng(seed)
+    a = np.where(rng.random((n, n)) < density, rng.normal(size=(n, n)), 0.0)
+    a += np.diag(rng.uniform(1, 3, n) * rng.choice([-1, 1], n))
+    b = rng.normal(size=n)
+    x, info = solve_system(CSR.from_dense(a), b,
+                           HyluOptions(force_mode=mode))
+    assert info["residual"] < 1e-8
+    x_ref = np.linalg.solve(a, b)
+    assert np.abs(x - x_ref).max() / (np.abs(x_ref).max() + 1e-30) < 1e-5
+
+
+def test_kernel_selection_modes():
+    """Circuit-like extreme sparsity selects row-row; denser selects hybrid."""
+    Ac, _, _ = random_system(300, 0.006, 13, kind="circuit")
+    an = analyze(Ac)
+    assert an.choice.mode == "rowrow", an.choice
+    Ad, _, _ = random_system(150, 0.2, 13)
+    an2 = analyze(Ad)
+    assert an2.choice.mode in ("hybrid", "supernodal"), an2.choice
+
+
+def test_baseline_presets():
+    Ac, a_sp, b = random_system(90, 0.06, 17)
+    x_ref = spla.spsolve(a_sp.tocsc(), b)
+    for name, mk in baselines.BASELINES.items():
+        x, info = solve_system(Ac, b, mk())
+        assert info["residual"] < 1e-9, name

@@ -1,9 +1,168 @@
-"""Thin per-figure wrapper (DESIGN.md experiment index) → benchmarks.run."""
-from .run import main as _main
+"""Repeated-solve benchmark (paper Fig 8 scenario + the batched JAX engine).
+
+One analysis, K refactorizations (+ solves) of the same sparsity pattern
+with drifting values — the circuit-simulation workload HYLU's headline
+2.90× repeated-factorization speedup comes from.  Three engines:
+
+  looped-ref   K × ref_engine.factor in a Python loop (numpy reference)
+  jitted-jax   K × pre-compiled XLA refactor calls (engine="jax")
+  batched-jax  one vmapped XLA program for all K (factor_batched)
+
+Compile time is reported separately: it is part of the one-time analysis
+cost, amortized over the thousands of steps of a transient run.
+
+Writes BENCH_repeated.json (per-matrix timings + geomean speedups over
+looped-ref) so successive PRs have a perf trajectory.
+
+    PYTHONPATH=src python -m benchmarks.bench_factor_repeated [--k 32] [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import CSR, analyze, factor, refactor, solve
+from repro.core.api import factor_batched, solve_batched, jax_repeated_engine
+from repro.core.ref_engine import factor_value_loop
+
+from . import matrices
+
+
+def _geomean(xs):
+    xs = [x for x in xs if x and np.isfinite(x) and x > 0]
+    return float(np.exp(np.mean(np.log(xs)))) if xs else float("nan")
+
+
+def _value_drift(data, k, rng):
+    """K value sets with the mild drift of Newton/transient sequences."""
+    return data[None, :] * rng.uniform(0.9, 1.1, (k, len(data)))
+
+
+def bench_matrix(name, Ac, k):
+    import jax
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(0)
+    an = analyze(Ac)
+    vb = _value_drift(Ac.data, k, rng)
+    bb = rng.normal(size=(k, Ac.n))
+    mats = [CSR(Ac.n, Ac.indptr, Ac.indices, vb[i]) for i in range(k)]
+    rec = dict(n=Ac.n, nnz=Ac.nnz, mode=an.choice.mode, k=k)
+
+    # ---- looped-ref: numeric refactorization only, then end-to-end --------
+    mb = vb[:, an.src_map] * an.scale_map
+    t0 = time.perf_counter()
+    factor_value_loop(an.plan, an.m_pattern, mb,
+                      perturb_eps=an.opts.perturb_eps)
+    rec["refac_ref_loop_s"] = time.perf_counter() - t0
+
+    st = factor(an, Ac, engine="ref")
+    t0 = time.perf_counter()
+    for i in range(k):
+        st_i = refactor(st, mats[i])
+        solve(st_i, bb[i])
+    rec["end2end_ref_loop_s"] = time.perf_counter() - t0
+
+    # ---- jitted-jax: compile once, K scalar pre-compiled calls ------------
+    eng = jax_repeated_engine(an)
+    t0 = time.perf_counter()
+    st_j = factor(an, Ac, engine="jax")          # triggers refactor compile
+    solve(st_j, bb[0])                           # triggers apply compile
+    rec["compile_scalar_s"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    for i in range(k):
+        jf = eng.refactor(jnp.asarray(vb[i]))
+    jax.block_until_ready(jf.vals)
+    rec["refac_jax_jit_s"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    for i in range(k):
+        st_i = refactor(st_j, mats[i])
+        solve(st_i, bb[i])
+    rec["end2end_jax_jit_s"] = time.perf_counter() - t0
+
+    # ---- batched-jax: one vmapped XLA program for all K -------------------
+    t0 = time.perf_counter()
+    bst = factor_batched(an, Ac, vb)             # includes vmap compile
+    x, info = solve_batched(bst, bb)
+    rec["compile_batched_s"] = time.perf_counter() - t0
+    assert float(info["residual"].max()) < 1e-8, (name, info["residual"].max())
+
+    t0 = time.perf_counter()
+    bst = factor_batched(an, Ac, vb)
+    rec["refac_jax_batched_s"] = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    bst = factor_batched(an, Ac, vb)
+    x, info = solve_batched(bst, bb)
+    rec["end2end_jax_batched_s"] = time.perf_counter() - t0
+
+    for which in ("jax_jit", "jax_batched"):
+        rec[f"speedup_refac_{which}"] = (rec["refac_ref_loop_s"]
+                                         / rec[f"refac_{which}_s"])
+        rec[f"speedup_end2end_{which}"] = (rec["end2end_ref_loop_s"]
+                                           / rec[f"end2end_{which}_s"])
+    return rec
+
+
+def suite(quick=False):
+    if quick:
+        return [("circuit_150", CSR.from_scipy(matrices.circuit_like(150, 1)
+                                               .tocsr()))]
+    return [
+        ("circuit_200", CSR.from_scipy(matrices.circuit_like(200, 1).tocsr())),
+        ("fem2d_12", CSR.from_scipy(matrices.fem2d(12, 12, 4).tocsr())),
+        ("unsym_150", CSR.from_scipy(matrices.unsym_random(150, 0.02, 8)
+                                     .tocsr())),
+    ]
+
+
+def bench_repeated(k=32, quick=False, out_path="BENCH_repeated.json"):
+    records = {}
+    for name, Ac in suite(quick=quick):
+        t0 = time.time()
+        records[name] = bench_matrix(name, Ac, k)
+        r = records[name]
+        print(f"[repeated] {name:14s} n={r['n']:5d} mode={r['mode']:8s} "
+              f"refac ref={r['refac_ref_loop_s']*1e3:7.1f}ms "
+              f"jit={r['refac_jax_jit_s']*1e3:7.1f}ms "
+              f"batched={r['refac_jax_batched_s']*1e3:7.1f}ms "
+              f"({r['speedup_refac_jax_batched']:.1f}x) "
+              f"[{time.time()-t0:.0f}s]", flush=True)
+
+    summary = {
+        "refactor_jit": _geomean(
+            [r["speedup_refac_jax_jit"] for r in records.values()]),
+        "refactor_batched": _geomean(
+            [r["speedup_refac_jax_batched"] for r in records.values()]),
+        "end2end_jit": _geomean(
+            [r["speedup_end2end_jax_jit"] for r in records.values()]),
+        "end2end_batched": _geomean(
+            [r["speedup_end2end_jax_batched"] for r in records.values()]),
+    }
+    out = dict(k=k, matrices=records, geomean_speedup_over_ref_loop=summary)
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"\ngeomean speedups over looped-ref (K={k}): "
+          + "  ".join(f"{n}={v:.2f}x" for n, v in summary.items()))
+    print(f"results → {out_path}")
+    return out
 
 
 def main(argv=None):
-    return _main(["--figures", "8"] + (argv or []))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--k", type=int, default=32)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="BENCH_repeated.json")
+    args = ap.parse_args(argv)
+    bench_repeated(k=args.k, quick=args.quick, out_path=args.out)
+    return 0
 
 
 if __name__ == "__main__":

@@ -130,6 +130,10 @@ def main(argv=None):
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--figures", default="4,5,6,7,8,9,10,11")
     ap.add_argument("--out", default="artifacts/bench")
+    ap.add_argument("--repeated-k", type=int, default=32,
+                    help="K value sets for the repeated-solve engine bench")
+    ap.add_argument("--no-repeated", action="store_true",
+                    help="skip the jax/batched repeated-solve engine bench")
     args = ap.parse_args(argv)
     figs = [int(f) for f in args.figures.split(",")]
     scale = 0.15 if args.quick else 0.35
@@ -186,6 +190,13 @@ def main(argv=None):
         json.dump(dict(records=records, summary=summary), f, indent=1,
                   default=str)
     print(f"results → {args.out}/bench_results.json")
+
+    # repeated-solve engine comparison (looped-ref vs jitted/batched jax) —
+    # the machine-readable perf trajectory for the repeated-solve path
+    if 8 in figs and not args.no_repeated:
+        from .bench_factor_repeated import bench_repeated
+        bench_repeated(k=args.repeated_k, quick=args.quick,
+                       out_path=os.path.join(args.out, "BENCH_repeated.json"))
     return 0
 
 

@@ -5,7 +5,7 @@
 import numpy as np
 import scipy.sparse as sp
 
-from repro.core import CSR, HyluOptions, solve_system
+from repro.core import CSR, solve_system
 
 # build a small FEM-ish system
 n = 2500

@@ -3,13 +3,19 @@ contribution) as a composable JAX module.
 
 Public API:
     CSR                       sparse container
-    HyluOptions               solver options (mode/ordering/pivoting knobs)
+    HyluOptions               solver options (mode/ordering/engine knobs)
     analyze / factor / refactor / solve / solve_system
+    factor_batched / solve_batched / solve_sequence
+                              batched repeated-solve path: K value sets of
+                              one pattern factored+solved as one XLA program
+    jax_repeated_engine       pre-compiled per-analysis jax engine bundle
     make_sparse_solve         differentiable jittable solver (custom_vjp)
     baselines                 pardiso_like / klu_like option presets
 """
 from .matrix import CSR
-from .api import (HyluOptions, Analysis, FactorState, analyze, factor,
-                  refactor, solve, solve_system)
+from .api import (HyluOptions, Analysis, FactorState, BatchedFactorState,
+                  analyze, factor, refactor, solve, solve_system,
+                  factor_batched, solve_batched, solve_sequence,
+                  jax_repeated_engine)
 from .autodiff import make_sparse_solve
 from . import baseline as baselines

@@ -21,11 +21,11 @@ import time
 import numpy as np
 
 from .matrix import CSR
-from .matching import max_weight_matching, apply_static_pivoting, MatchResult
+from .matching import max_weight_matching, MatchResult
 from .ordering import select_ordering
 from .kernel_select import select_kernel, KernelChoice
-from .plan import build_plan, FactorPlan, plan_stats
-from .symbolic import Symbolic, symbolic_stats
+from .plan import build_plan, FactorPlan
+from .symbolic import Symbolic
 from . import ref_engine
 from .ref_engine import Factors, SolvePlan
 
@@ -40,6 +40,8 @@ class HyluOptions:
     refine_max_iter: int = 3
     refine_tol: float = 1e-12
     bulk_min_width: int = 8
+    engine: str = "ref"                    # ref | jax — default numeric engine
+    use_pallas: bool = False               # route jax panel updates via Pallas
 
 
 @dataclasses.dataclass
@@ -58,15 +60,37 @@ class Analysis:
     scale_map: np.ndarray
     m_pattern: tuple           # (indptr, indices) of M
     timings: dict
+    # jit cache keyed on this analysis' plan: (dtype name, use_pallas) →
+    # jax_engine.RepeatedSolveEngine (built lazily on first jax-engine use)
+    jit_cache: dict = dataclasses.field(default_factory=dict, repr=False)
 
 
 @dataclasses.dataclass
 class FactorState:
     analysis: Analysis
-    factors: Factors
-    solve_plan: SolvePlan
+    factors: Factors | None
+    solve_plan: SolvePlan | None
     a: CSR                     # the matrix these factors correspond to
     timings: dict
+    engine: str = "ref"
+    jax_factors: object = None  # jax_engine.JaxFactors when engine == "jax"
+
+
+@dataclasses.dataclass
+class BatchedFactorState:
+    """K factorizations of one sparsity pattern (K value sets), held as
+    stacked device arrays — the state of the batched repeated-solve path."""
+    analysis: Analysis
+    a_pattern: tuple           # (indptr, indices) of the original matrices
+    values_batch: np.ndarray   # (K, nnz) original A values (residual checks)
+    vals: object               # jax (K, total_slots) factored panel buffers
+    inode_perm: object         # jax (K, n) in-node pivot permutations
+    n_perturb: np.ndarray      # (K,) perturbation counts
+    timings: dict
+
+    @property
+    def k(self) -> int:
+        return self.values_batch.shape[0]
 
 
 def analyze(a: CSR, opts: HyluOptions | None = None, reuse=None) -> Analysis:
@@ -125,12 +149,67 @@ def _m_values(an: Analysis, a: CSR) -> CSR:
     return CSR(a.n, an.m_pattern[0], an.m_pattern[1], data)
 
 
-def factor(an: Analysis, a: CSR, engine=ref_engine) -> FactorState:
-    """Numeric factorization + solve-plan build."""
+def jax_repeated_engine(an: Analysis, dtype=None, use_pallas: bool | None = None):
+    """The pre-compiled repeated-solve engine for this analysis.
+
+    Built lazily and cached on the analysis (keyed by dtype/pallas), so
+    every subsequent factor/refactor/solve through ``engine="jax"`` — and
+    every batched call — is one already-compiled XLA program."""
+    import jax.numpy as jnp
+
+    from .jax_engine import RepeatedSolveEngine
+    from .structure import build_solve_structure
+
+    dtype = jnp.float64 if dtype is None else dtype
+    use_pallas = an.opts.use_pallas if use_pallas is None else use_pallas
+    key = (np.dtype(dtype).name, bool(use_pallas))
+    eng = an.jit_cache.get(key)
+    if eng is None:
+        ss = build_solve_structure(an.plan,
+                                   bulk_min_width=an.opts.bulk_min_width)
+        eng = RepeatedSolveEngine(
+            an.plan, ss, src_map=an.src_map, scale_map=an.scale_map,
+            p=an.p, q=an.q, row_scale=an.match.row_scale,
+            col_scale=an.match.col_scale, perturb_eps=an.opts.perturb_eps,
+            dtype=dtype, use_pallas=use_pallas)
+        an.jit_cache[key] = eng
+    return eng
+
+
+def _factor_jax(an: Analysis, a: CSR) -> FactorState:
+    import jax
+    import jax.numpy as jnp
+
+    eng = jax_repeated_engine(an)
+    t = {}
+    t0 = time.perf_counter()
+    jf = eng.refactor(jnp.asarray(a.data))
+    jax.block_until_ready(jf.vals)
+    t["factor"] = time.perf_counter() - t0
+    return FactorState(analysis=an, factors=None, solve_plan=None, a=a,
+                       timings=t, engine="jax", jax_factors=jf)
+
+
+def factor(an: Analysis, a: CSR, engine=None) -> FactorState:
+    """Numeric factorization + solve-plan build.
+
+    engine: "ref" (numpy), "jax" (pre-compiled XLA; solve structure is
+    static so no per-factor solve-plan rebuild), a ref-compatible engine
+    module, or None → an.opts.engine."""
+    engine = an.opts.engine if engine is None else engine
+    if engine == "jax":
+        return _factor_jax(an, a)
+    if engine == "ref":
+        mod = ref_engine
+    elif hasattr(engine, "factor"):
+        mod = engine
+    else:
+        raise ValueError(f"unknown engine {engine!r}: expected 'ref', 'jax', "
+                         "or an engine module with a factor() function")
     t = {}
     t0 = time.perf_counter()
     m = _m_values(an, a)
-    f = engine.factor(an.plan, m, perturb_eps=an.opts.perturb_eps)
+    f = mod.factor(an.plan, m, perturb_eps=an.opts.perturb_eps)
     t["factor"] = time.perf_counter() - t0
     t0 = time.perf_counter()
     sp = ref_engine.build_solve_plan(f, bulk_min_width=an.opts.bulk_min_width)
@@ -140,8 +219,11 @@ def factor(an: Analysis, a: CSR, engine=ref_engine) -> FactorState:
 
 def refactor(st: FactorState, a_new: CSR) -> FactorState:
     """Repeated-solve path: same pattern, new values; reuses the analysis
-    AND the solve plan's structure (values refresh only)."""
+    AND the solve plan's structure (values refresh only).  On the jax
+    engine this is a single pre-compiled ``a_data -> factors`` call."""
     an = st.analysis
+    if st.engine == "jax":
+        return _factor_jax(an, a_new)
     t = {}
     t0 = time.perf_counter()
     m = _m_values(an, a_new)
@@ -156,16 +238,30 @@ def refactor(st: FactorState, a_new: CSR) -> FactorState:
 def solve(st: FactorState, b: np.ndarray, refine: bool | None = None) -> tuple:
     """Forward/backward substitution + iterative refinement (auto when pivot
     perturbation occurred, per paper §2.3). Returns (x, info)."""
-    an, f = st.analysis, st.factors
+    an = st.analysis
     opts = an.opts
     t0 = time.perf_counter()
 
-    def lu_apply(rhs: np.ndarray) -> np.ndarray:
-        c = (an.match.row_scale * rhs)[an.p][f.inode_perm]
-        w = ref_engine.solve_lu(st.solve_plan, c)
-        z = np.empty_like(w); z[an.p] = w
-        y = np.empty_like(z); y[an.q] = z
-        return an.match.col_scale * y
+    if st.engine == "jax":
+        import jax.numpy as jnp
+
+        eng = jax_repeated_engine(an)
+        jf = st.jax_factors
+        n_perturb = int(jf.n_perturb)
+
+        def lu_apply(rhs: np.ndarray) -> np.ndarray:
+            return np.asarray(eng.apply(jf.vals, jf.inode_perm,
+                                        jnp.asarray(rhs)))
+    else:
+        f = st.factors
+        n_perturb = f.n_perturb
+
+        def lu_apply(rhs: np.ndarray) -> np.ndarray:
+            c = (an.match.row_scale * rhs)[an.p][f.inode_perm]
+            w = ref_engine.solve_lu(st.solve_plan, c)
+            z = np.empty_like(w); z[an.p] = w
+            y = np.empty_like(z); y[an.q] = z
+            return an.match.col_scale * y
 
     x = lu_apply(b)
     n_ref = 0
@@ -174,7 +270,7 @@ def solve(st: FactorState, b: np.ndarray, refine: bool | None = None) -> tuple:
     # auto-refine when pivot perturbation occurred (paper §2.3) or the
     # residual is above the target
     do_refine = refine if refine is not None else (
-        f.n_perturb > 0 or resid > opts.refine_tol)
+        n_perturb > 0 or resid > opts.refine_tol)
     if do_refine:
         for _ in range(opts.refine_max_iter):
             if resid <= opts.refine_tol:
@@ -186,7 +282,7 @@ def solve(st: FactorState, b: np.ndarray, refine: bool | None = None) -> tuple:
             if resid2 >= resid:
                 break
             x, resid = x2, resid2
-    info = dict(residual=resid, n_refine=n_ref, n_perturb=f.n_perturb,
+    info = dict(residual=resid, n_refine=n_ref, n_perturb=n_perturb,
                 solve_time=time.perf_counter() - t0)
     return x, info
 
@@ -199,4 +295,129 @@ def solve_system(a: CSR, b: np.ndarray, opts: HyluOptions | None = None):
     info["timings"] = {"preprocess": an.timings, "factor": st.timings}
     info["mode"] = an.choice.mode
     info["ordering"] = an.ordering_name
+    info["engine"] = st.engine
+    return x, info
+
+
+# --------------------------------------------------------------------------
+# batched repeated solve: K value sets of one pattern as one XLA program
+# --------------------------------------------------------------------------
+def _pattern_of(a_pattern) -> tuple:
+    if isinstance(a_pattern, CSR):
+        return (a_pattern.indptr, a_pattern.indices)
+    indptr, indices = a_pattern
+    return (np.asarray(indptr), np.asarray(indices))
+
+
+def _batched_matvec(pattern: tuple, values_batch: np.ndarray,
+                    x_batch: np.ndarray) -> np.ndarray:
+    """(A_k x_k) for K CSR matrices sharing one pattern: one gather +
+    row-segment reduction for the whole batch."""
+    indptr, indices = pattern
+    prod = values_batch * x_batch[:, indices]
+    counts = np.diff(indptr)
+    if len(counts) == 0:
+        return np.zeros_like(x_batch)
+    if counts.min() > 0:
+        return np.add.reduceat(prod, indptr[:-1], axis=1)
+    # reduceat mishandles empty rows; fall back to bincount per batch entry
+    seg = np.repeat(np.arange(len(counts)), counts)
+    out = np.zeros((x_batch.shape[0], len(counts)))
+    for k in range(out.shape[0]):
+        out[k] = np.bincount(seg, weights=prod[k], minlength=len(counts))
+    return out
+
+
+def factor_batched(an: Analysis, a_pattern, values_batch) -> BatchedFactorState:
+    """K numeric factorizations (one pattern, K value sets) as a single
+    pre-compiled vmapped XLA call — HYLU's repeated-solve optimization
+    lifted to a batch."""
+    import jax
+    import jax.numpy as jnp
+
+    eng = jax_repeated_engine(an)
+    values_batch = np.ascontiguousarray(
+        np.atleast_2d(np.asarray(values_batch, dtype=np.float64)))
+    t = {}
+    t0 = time.perf_counter()
+    jf = eng.refactor_batched(jnp.asarray(values_batch))
+    jax.block_until_ready(jf.vals)
+    t["factor_batched"] = time.perf_counter() - t0
+    return BatchedFactorState(
+        analysis=an, a_pattern=_pattern_of(a_pattern),
+        values_batch=values_batch, vals=jf.vals, inode_perm=jf.inode_perm,
+        n_perturb=np.asarray(jf.n_perturb), timings=t)
+
+
+def solve_batched(bst: BatchedFactorState, b_batch: np.ndarray,
+                  refine: bool | None = None) -> tuple:
+    """Batched substitution + iterative refinement: X[k] solves
+    A_k x = b_k against the K stored factorizations.  b_batch: (K, n) or
+    (n,) broadcast across the batch.  Returns (X, info) with per-system
+    residuals."""
+    import jax.numpy as jnp
+
+    an = bst.analysis
+    opts = an.opts
+    eng = jax_repeated_engine(an)
+    t0 = time.perf_counter()
+    b_batch = np.asarray(b_batch, dtype=np.float64)
+    if b_batch.ndim == 1:
+        b_batch = np.broadcast_to(b_batch, (bst.k, b_batch.shape[0]))
+
+    def residuals(x):
+        r = b_batch - _batched_matvec(bst.a_pattern, bst.values_batch, x)
+        return r, np.abs(r).sum(axis=1) / bnorm
+
+    bnorm = np.abs(b_batch).sum(axis=1)
+    bnorm = np.where(bnorm == 0.0, 1.0, bnorm)
+    x = np.asarray(eng.apply_batched(bst.vals, bst.inode_perm,
+                                     jnp.asarray(b_batch)))
+    r, resid = residuals(x)
+    n_ref = 0
+    do_refine = refine if refine is not None else bool(
+        np.any(bst.n_perturb > 0) or np.any(resid > opts.refine_tol))
+    if do_refine:
+        for _ in range(opts.refine_max_iter):
+            if np.all(resid <= opts.refine_tol):
+                break
+            x2 = x + np.asarray(eng.apply_batched(bst.vals, bst.inode_perm,
+                                                  jnp.asarray(r)))
+            r2, resid2 = residuals(x2)
+            n_ref += 1
+            improved = resid2 < resid
+            if not improved.any():
+                break
+            x = np.where(improved[:, None], x2, x)
+            resid = np.where(improved, resid2, resid)
+            r = np.where(improved[:, None], r2, r)
+    info = dict(residual=resid, n_refine=n_ref, n_perturb=bst.n_perturb,
+                solve_time=time.perf_counter() - t0)
+    return x, info
+
+
+def solve_sequence(a_pattern, values_batch, b_batch,
+                   opts: HyluOptions | None = None) -> tuple:
+    """Repeated-solve convenience (the paper's §3.2 scenario, batched):
+    one analysis, then K factorizations + K solves as pre-compiled batched
+    XLA programs.
+
+    a_pattern     CSR (or (indptr, indices)) — the shared sparsity pattern
+    values_batch  (K, nnz) value sets; values_batch[0] seeds the analysis
+                  (matching/ordering are value-dependent but stable across
+                  the mild value drift of Newton/transient sequences)
+    b_batch       (K, n) right-hand sides, or (n,) broadcast
+    """
+    values_batch = np.atleast_2d(np.asarray(values_batch, dtype=np.float64))
+    pattern = _pattern_of(a_pattern)
+    n = len(pattern[0]) - 1
+    a0 = CSR(n, pattern[0], pattern[1], values_batch[0].copy())
+    an = analyze(a0, opts)
+    bst = factor_batched(an, pattern, values_batch)
+    x, info = solve_batched(bst, b_batch)
+    info["timings"] = {"preprocess": an.timings, "factor": bst.timings}
+    info["mode"] = an.choice.mode
+    info["ordering"] = an.ordering_name
+    info["engine"] = "jax-batched"
+    info["k"] = bst.k
     return x, info

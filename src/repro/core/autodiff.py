@@ -18,7 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .api import Analysis
-from .jax_engine import make_factor_fn, make_lu_solver
+from .jax_engine import make_factor_fn, make_lu_solver, make_permuted_apply
 from .structure import build_solve_structure
 
 
@@ -42,16 +42,15 @@ def make_sparse_solve(an: Analysis, dtype=jnp.float64, use_pallas: bool = False,
     # original-pattern (row, col) per nnz for the A-values cotangent
     indptr, indices = an.m_pattern  # M pattern; invert src_map below.
 
+    lu_apply = make_permuted_apply(lu_solve, an.n, an.p, an.q,
+                                   an.match.row_scale, an.match.col_scale,
+                                   dtype=dtype)
+
     def _fwd_impl(a_data, b):
         a_data = a_data.astype(dtype)
         m_data = a_data[src_map] * scale_map
         f = factor_fn(m_data)
-        c = (r_ * b.astype(dtype))[p_][f.inode_perm]
-        w = lu_solve(f.vals, c)
-        z = jnp.zeros(n, dtype).at[p_].set(w)
-        y = jnp.zeros(n, dtype).at[q_].set(z)
-        x = s_ * y
-        return x, f
+        return lu_apply(f.vals, f.inode_perm, b), f
 
     @jax.custom_vjp
     def sparse_solve(a_data, b):

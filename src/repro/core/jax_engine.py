@@ -19,7 +19,6 @@ diagonal block (supernode diagonal pivoting + pivot perturbation).
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax
@@ -27,7 +26,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from .plan import FactorPlan
-from .ref_engine import SolvePlan
 
 
 class JaxFactors(NamedTuple):
@@ -192,3 +190,133 @@ def make_lu_solver(ss, dtype=jnp.float64):
         return _tri_solve(ss.lt_bwd, vals, y)
 
     return lu_solve, lut_solve
+
+
+# --------------------------------------------------------------------------
+# batched repeated-solve path: K factorizations + K solves, one XLA program
+# --------------------------------------------------------------------------
+def _tri_solve_batched(sched, vals, rhs, diag_slots=None):
+    """Batched level-scheduled substitution: vals (K, slots), rhs (K, n).
+
+    Same schedule as ``_tri_solve`` but each level's gather + segment-sum is
+    vectorized over the batch as well — one (K, m) product and one
+    segment-sum per level for the whole batch, instead of K programs."""
+    w = rhs
+    for rows, cols, slot, seg in zip(sched.rows, sched.cols, sched.slot,
+                                     sched.seg):
+        if len(cols):
+            prod = vals[:, slot] * w[:, cols]                        # (K, m)
+            acc = jax.ops.segment_sum(prod.T, seg,
+                                      num_segments=len(rows)).T      # (K, r)
+        if diag_slots is None:          # unit-diagonal L
+            if len(cols):
+                w = w.at[:, rows].add(-acc)
+        else:
+            d = vals[:, diag_slots[rows]]
+            if len(cols):
+                w = w.at[:, rows].set((w[:, rows] - acc) / d)
+            else:
+                w = w.at[:, rows].set(w[:, rows] / d)
+    return w
+
+
+def make_batched_lu_solver(ss, dtype=jnp.float64):
+    """Batched variant of :func:`make_lu_solver` over (K, slots)/(K, n)."""
+    def lu_solve_batched(vals, c):
+        y = _tri_solve_batched(ss.l_fwd, vals, c.astype(vals.dtype))
+        return _tri_solve_batched(ss.u_bwd, vals, y,
+                                  diag_slots=ss.lu.u_diag_slots)
+    return lu_solve_batched
+
+
+def make_permuted_apply(lu_solve, n, p, q, row_scale, col_scale,
+                        dtype=jnp.float64):
+    """Compose the full solve A⁻¹ b from LU substitution and the analysis
+    transformations (see api.py header):
+
+        apply(vals, inode_perm, b) = s · scatter_q(scatter_p(
+                                       U⁻¹ L⁻¹ ((r·b)[p][inode_perm]) ))
+
+    Single definition shared by the repeated-solve engine and the
+    differentiable solver (autodiff) so the permutation/scaling semantics
+    cannot diverge."""
+    p_ = jnp.asarray(p)
+    q_ = jnp.asarray(q)
+    r_ = jnp.asarray(row_scale, dtype=dtype)
+    s_ = jnp.asarray(col_scale, dtype=dtype)
+
+    def apply(vals, inode_perm, b):
+        c = (r_ * b.astype(dtype))[p_][inode_perm]
+        w = lu_solve(vals, c)
+        z = jnp.zeros(n, dtype).at[p_].set(w)
+        y = jnp.zeros(n, dtype).at[q_].set(z)
+        return s_ * y
+
+    return apply
+
+
+class RepeatedSolveEngine:
+    """Pre-compiled repeated-solve engine for one analysis pattern.
+
+    Holds the jitted callables HYLU's repeated-solve scenario needs — the
+    analysis is done once on the host, then every (re)factorization and
+    substitution is a single pre-compiled XLA call:
+
+      refactor(a_data)                 -> JaxFactors        (one value set)
+      refactor_batched(a_batch)        -> JaxFactors, vmapped over K sets
+      apply(vals, inode_perm, b)       -> x   solving A x = b with the stored
+                                              factors (scales + permutations
+                                              + LU substitution fused)
+      apply_batched(vals, inode, B)    -> X   (K, n) via the natively batched
+                                              level-scheduled tri-solve
+
+    All index maps (scatter/gather, permutations, level schedules) are
+    compile-time constants; only values flow through the program, so one
+    compilation serves thousands of Newton/time/Monte-Carlo steps.
+    """
+
+    def __init__(self, plan: FactorPlan, ss, *, src_map, scale_map, p, q,
+                 row_scale, col_scale, perturb_eps: float = 1e-8,
+                 dtype=jnp.float64, use_pallas: bool = False,
+                 interpret: bool = True):
+        if np.dtype(dtype) == np.float64 and not jax.config.jax_enable_x64:
+            # without this, float64 silently degrades to float32 and every
+            # solve limps through refinement at ~1e-6 residuals
+            raise RuntimeError(
+                "engine dtype is float64 but jax x64 is disabled — run "
+                "jax.config.update('jax_enable_x64', True) before building "
+                "the engine, or request dtype=jnp.float32 explicitly")
+        self.n = plan.n
+        self.dtype = dtype
+        factor_fn = make_factor_fn(plan, perturb_eps=perturb_eps, dtype=dtype,
+                                   use_pallas=use_pallas, interpret=interpret)
+        lu_solve, lut_solve = make_lu_solver(ss, dtype=dtype)
+        lu_solve_b = make_batched_lu_solver(ss, dtype=dtype)
+        src = jnp.asarray(src_map)
+        scl = jnp.asarray(scale_map, dtype=dtype)
+        p_ = jnp.asarray(p)
+        q_ = jnp.asarray(q)
+        r_ = jnp.asarray(row_scale, dtype=dtype)
+        s_ = jnp.asarray(col_scale, dtype=dtype)
+        n = self.n
+
+        def _refactor(a_data):
+            # A.data -> M.data is a pure gather+scale (see api.analyze)
+            return factor_fn(a_data.astype(dtype)[src] * scl)
+
+        _apply = make_permuted_apply(lu_solve, n, p, q, row_scale, col_scale,
+                                     dtype=dtype)
+
+        def _apply_batched(vals, inode_perm, b):
+            c = (r_ * b.astype(dtype))[:, p_]
+            c = jnp.take_along_axis(c, inode_perm, axis=1)
+            w = lu_solve_b(vals, c)
+            z = jnp.zeros_like(w).at[:, p_].set(w)
+            y = jnp.zeros_like(z).at[:, q_].set(z)
+            return s_ * y
+
+        self.refactor = jax.jit(_refactor)
+        self.refactor_batched = jax.jit(jax.vmap(_refactor))
+        self.apply = jax.jit(_apply)
+        self.apply_batched = jax.jit(_apply_batched)
+        self.lut_solve = jax.jit(lut_solve)

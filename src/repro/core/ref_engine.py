@@ -15,7 +15,10 @@ import dataclasses
 import numpy as np
 
 from .matrix import CSR
-from .plan import FactorPlan, NodePlan
+from .plan import FactorPlan
+
+__all__ = ["Factors", "SolvePlan", "LevelSched", "factor", "refactor",
+           "factor_value_loop", "extract_lu", "build_solve_plan", "solve_lu"]
 
 
 @dataclasses.dataclass
@@ -132,6 +135,20 @@ def refactor(f: Factors, b_new: CSR) -> Factors:
     """HYLU's repeated-solve optimization: the entire analysis (plan) is
     reused; only the numeric phase runs. b_new must share b's pattern."""
     return factor(f.plan, b_new, perturb_eps=f.perturb_eps)
+
+
+def factor_value_loop(plan: FactorPlan, pattern: tuple, m_data_batch,
+                      perturb_eps: float = 1e-8) -> list:
+    """K independent factorizations of one pattern, as a Python loop.
+
+    pattern is (indptr, indices) of the preprocessed matrix M; m_data_batch
+    is (K, nnz).  This is the looped-reference baseline that the batched JAX
+    path (jax_engine.RepeatedSolveEngine.refactor_batched) is measured
+    against, and the parity oracle for its results."""
+    indptr, indices = pattern
+    return [factor(plan, CSR(plan.n, indptr, indices, np.asarray(d)),
+                   perturb_eps=perturb_eps)
+            for d in m_data_batch]
 
 
 # --------------------------------------------------------------------------

@@ -3,9 +3,9 @@ import jax
 import jax.numpy as jnp
 
 from .kernel import trsm_upper
-from .ref import trsm_upper_ref
+from .ref import trsm_upper_ref, trsm_upper_ref_batched
 
-__all__ = ["trsm", "trsm_upper_ref"]
+__all__ = ["trsm", "trsm_batched", "trsm_upper_ref", "trsm_upper_ref_batched"]
 
 
 def trsm(u: jax.Array, x: jax.Array, interpret: bool = True) -> jax.Array:
@@ -18,3 +18,25 @@ def trsm(u: jax.Array, x: jax.Array, interpret: bool = True) -> jax.Array:
         x_p = jnp.zeros((nr, kp), x.dtype).at[:, :k].set(x)
         return trsm_upper(u_p, x_p, interpret=interpret)[:, :k]
     return trsm_upper(u, x, interpret=interpret)
+
+
+def trsm_batched(u: jax.Array, x: jax.Array, interpret: bool = True) -> jax.Array:
+    """Batched TRSM: u (K, k, k), x (K, nr, k) — K independent panel solves
+    through one vmapped pallas_call.
+
+    Standalone building block for a future Pallas-batched factorization
+    path; the current batched engine (`jax_engine.RepeatedSolveEngine`)
+    vmaps the whole factor program and uses the segment-sum batched
+    tri-solve for substitution, so this op is not yet on that path."""
+    nr, k = x.shape[-2:]
+    kp = max(8, -(-k // 8) * 8)
+    if kp != k:
+        kb = x.shape[0]
+        u_p = (jnp.zeros((kb, kp, kp), u.dtype)
+               .at[:, jnp.arange(kp), jnp.arange(kp)].set(1.0)
+               .at[:, :k, :k].set(u))
+        x_p = jnp.zeros((kb, nr, kp), x.dtype).at[:, :, :k].set(x)
+        y = jax.vmap(lambda uu, xx: trsm_upper(uu, xx, interpret=interpret))(
+            u_p, x_p)
+        return y[:, :, :k]
+    return jax.vmap(lambda uu, xx: trsm_upper(uu, xx, interpret=interpret))(u, x)

@@ -14,3 +14,14 @@ def trsm_upper_ref(u: jax.Array, x: jax.Array) -> jax.Array:
 
     y0 = jnp.zeros_like(x)
     return jax.lax.fori_loop(0, k, body, y0)
+
+
+def trsm_upper_ref_batched(u: jax.Array, x: jax.Array) -> jax.Array:
+    """Batched oracle: u (K, k, k), x (K, nr, k); y[i] @ u[i] == x[i]."""
+    k = u.shape[-1]
+
+    def body(j, y):
+        acc = x[..., j] - jnp.einsum("bnk,bk->bn", y, u[..., j])
+        return y.at[..., j].set(acc / u[:, j, j][:, None])
+
+    return jax.lax.fori_loop(0, k, body, jnp.zeros_like(x))

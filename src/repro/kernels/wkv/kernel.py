@@ -18,6 +18,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax 0.5 renamed TPUCompilerParams -> CompilerParams; support both
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 
 def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_scr, *,
                 bt: int):
@@ -61,7 +65,7 @@ def wkv(r, k, v, w, u, bt: int = 256, interpret: bool = True):
         out_specs=pl.BlockSpec((1, bt, hs), lambda b, i: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, t, hs), jnp.float32),
         scratch_shapes=[pltpu.VMEM((hs, hs), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),

@@ -1,0 +1,63 @@
+"""Hypothesis import shim.
+
+Uses the real ``hypothesis`` package when it is installed (CI installs it
+via the ``test`` extra in pyproject.toml).  In minimal environments the
+property tests fall back to a deterministic fixed-seed random search over
+the same strategy ranges, so the suite always collects and the properties
+are still exercised — just without shrinking or example databases.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+
+    import numpy as np
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class _StrategiesModule:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda rng: elements[int(rng.integers(len(elements)))])
+
+    st = _StrategiesModule()
+
+    def given(*strategies):
+        def decorate(fn):
+            @functools.wraps(fn)
+            def wrapper():
+                rng = np.random.default_rng(0)
+                for _ in range(getattr(wrapper, "_max_examples", 20)):
+                    fn(*[s.draw(rng) for s in strategies])
+            # hide the wrapped signature: the strategy args are filled by the
+            # shim, so pytest must not mistake them for fixtures
+            del wrapper.__wrapped__
+            wrapper._max_examples = 20
+            return wrapper
+        return decorate
+
+    def settings(max_examples=20, **_ignored):
+        def decorate(fn):
+            fn._max_examples = max_examples
+            return fn
+        return decorate

@@ -51,8 +51,8 @@ def test_checkpoint_elastic_reshard(tmp_path):
     ck = Checkpointer(str(tmp_path), async_save=False)
     t = dict(w=jnp.arange(16.0).reshape(4, 4))
     ck.save(1, t)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import compat_make_mesh
+    mesh = compat_make_mesh((1,), ("data",))
     from jax.sharding import NamedSharding, PartitionSpec as P
     sh = dict(w=NamedSharding(mesh, P("data", None)))
     restored = ck.restore(1, t, shardings=sh)
@@ -182,6 +182,8 @@ def test_hlo_cost_matches_xla_flat():
         jax.ShapeDtypeStruct((128, 16), jnp.float32)).compile()
     mine = hlo_cost.analyze(c.as_text())
     xla = c.cost_analysis()
+    if isinstance(xla, (list, tuple)):        # older jax returns [dict]
+        xla = xla[0]
     assert abs(mine.flops - xla["flops"]) / xla["flops"] < 0.05
     assert abs(mine.bytes_accessed - xla["bytes accessed"]) \
         / xla["bytes accessed"] < 0.05
@@ -215,8 +217,8 @@ import jax, jax.numpy as jnp
 from repro.configs import registry
 from repro.configs.shapes import ShapeCfg
 from repro.launch.dryrun import lower_cell
-mesh = jax.make_mesh((4, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import compat_make_mesh
+mesh = compat_make_mesh((4, 4), ("data", "model"))
 cfg = registry.get("phi3-medium-14b").reduced()
 shape = ShapeCfg("smoke", 64, 8, "train")
 rec = lower_cell(cfg, shape, mesh, "mesh4x4", seq_chunk=32)

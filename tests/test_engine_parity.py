@@ -1,0 +1,128 @@
+"""API-level ref ≡ jax engine parity in all three kernel modes, plus the
+batched repeated-solve path against a Python loop of refactor.
+
+The jax engine must produce bit-comparable factors (same panels, same
+in-node pivot choices, same perturbation count) and solves within
+float64 round-off of the reference engine; the batched path must match a
+Python loop of single refactorizations exactly (it is the same program,
+vmapped)."""
+import numpy as np
+import pytest
+import scipy.sparse.linalg as spla
+
+from repro.core import (CSR, HyluOptions, analyze, factor, refactor, solve,
+                        factor_batched, solve_batched, solve_sequence)
+from repro.core.api import _m_values
+from repro.core import ref_engine
+from repro.core.ref_engine import factor_value_loop
+
+from tests.helpers import random_system
+
+MODES = ["rowrow", "hybrid", "supernodal"]
+
+
+@pytest.fixture(scope="module", params=MODES)
+def mode_state(request):
+    """One analysis per kernel mode, shared across this module's tests so
+    the jax engine (and its jit cache) compiles once per mode."""
+    mode = request.param
+    Ac, a_sp, b = random_system(44, 0.08, 5)
+    an = analyze(Ac, HyluOptions(force_mode=mode, engine="jax"))
+    return mode, Ac, a_sp, b, an
+
+
+def test_factor_parity(mode_state):
+    mode, Ac, a_sp, b, an = mode_state
+    st = factor(an, Ac)                       # engine="jax" from opts
+    assert st.engine == "jax"
+    f_ref = ref_engine.factor(an.plan, _m_values(an, Ac),
+                              perturb_eps=an.opts.perturb_eps)
+    assert np.abs(np.asarray(st.jax_factors.vals) - f_ref.vals).max() < 1e-11
+    assert np.array_equal(np.asarray(st.jax_factors.inode_perm),
+                          f_ref.inode_perm)
+    assert int(st.jax_factors.n_perturb) == f_ref.n_perturb
+
+
+def test_solve_parity(mode_state):
+    mode, Ac, a_sp, b, an = mode_state
+    st_jax = factor(an, Ac)
+    x_jax, info_jax = solve(st_jax, b)
+    st_ref = factor(an, Ac, engine="ref")
+    x_ref, info_ref = solve(st_ref, b)
+    assert info_jax["residual"] < 1e-10, mode
+    assert info_ref["residual"] < 1e-10, mode
+    scale = np.abs(x_ref).max() + 1e-30
+    assert np.abs(x_jax - x_ref).max() / scale < 1e-9
+
+
+def test_refactor_parity(mode_state):
+    mode, Ac, a_sp, b, an = mode_state
+    rng = np.random.default_rng(3)
+    a2 = CSR(Ac.n, Ac.indptr, Ac.indices,
+             Ac.data * rng.uniform(0.8, 1.2, Ac.nnz))
+    st2 = refactor(factor(an, Ac), a2)        # jax: one pre-compiled call
+    x2, info2 = solve(st2, b)
+    assert info2["residual"] < 1e-10, mode
+    x_ref = spla.spsolve(a2.to_scipy().tocsc(), b)
+    assert np.abs(x2 - x_ref).max() / (np.abs(x_ref).max() + 1e-30) < 1e-6
+
+
+def test_batched_matches_refactor_loop(mode_state):
+    """factor_batched/solve_batched ≡ a Python loop of refactor + solve —
+    both against the jitted scalar path and the numpy reference loop."""
+    mode, Ac, a_sp, b, an = mode_state
+    k = 5
+    rng = np.random.default_rng(11)
+    vb = Ac.data[None, :] * rng.uniform(0.8, 1.2, (k, Ac.nnz))
+    bb = rng.normal(size=(k, Ac.n))
+
+    bst = factor_batched(an, Ac, vb)
+    x, info = solve_batched(bst, bb)
+    assert info["residual"].shape == (k,)
+    assert info["residual"].max() < 1e-10, mode
+
+    # numpy reference loop over the same value sets (M-space values)
+    mb = vb[:, an.src_map] * an.scale_map
+    refs = factor_value_loop(an.plan, an.m_pattern, mb,
+                             perturb_eps=an.opts.perturb_eps)
+    vals_b = np.asarray(bst.vals)
+    inode_b = np.asarray(bst.inode_perm)
+    for i, fr in enumerate(refs):
+        # rowrow chains long scalar recurrences → slightly looser round-off
+        assert np.abs(vals_b[i] - fr.vals).max() < 1e-9, (mode, i)
+        assert np.array_equal(inode_b[i], fr.inode_perm), (mode, i)
+        assert bst.n_perturb[i] == fr.n_perturb, (mode, i)
+
+    # x parity against the scalar jitted refactor path
+    st = factor(an, Ac)
+    for i in range(k):
+        sti = refactor(st, CSR(Ac.n, Ac.indptr, Ac.indices, vb[i]))
+        xi, _ = solve(sti, bb[i])
+        assert np.abs(xi - x[i]).max() / (np.abs(xi).max() + 1e-30) < 1e-9
+
+
+def test_solve_sequence_end_to_end():
+    """One-call batched repeated solve vs scipy ground truth per system."""
+    Ac, a_sp, b = random_system(40, 0.09, 9)
+    k = 4
+    rng = np.random.default_rng(2)
+    vb = Ac.data[None, :] * rng.uniform(0.9, 1.1, (k, Ac.nnz))
+    bb = rng.normal(size=(k, Ac.n))
+    x, info = solve_sequence(Ac, vb, bb)
+    assert info["k"] == k
+    assert info["engine"] == "jax-batched"
+    assert info["residual"].max() < 1e-10
+    for i in range(k):
+        ai = a_sp.copy()
+        ai.data = vb[i].copy()
+        x_ref = spla.spsolve(ai.tocsc(), bb[i])
+        assert np.abs(x[i] - x_ref).max() / (np.abs(x_ref).max() + 1e-30) < 1e-6
+
+
+def test_solve_sequence_broadcast_rhs():
+    """(n,) rhs broadcasts across the batch."""
+    Ac, a_sp, b = random_system(36, 0.1, 13)
+    vb = np.stack([Ac.data, Ac.data * 1.05])
+    x, info = solve_sequence(Ac, vb, b)
+    assert x.shape == (2, Ac.n)
+    assert info["residual"].max() < 1e-10

@@ -9,7 +9,6 @@ from repro.core.jax_engine import make_factor_fn, make_lu_solver
 from repro.core.structure import build_solve_structure
 from repro.core.autodiff import make_sparse_solve
 from repro.core import ref_engine
-from repro.core.matrix import CSR
 
 from tests.helpers import random_system
 

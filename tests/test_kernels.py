@@ -1,6 +1,5 @@
 """Per-Pallas-kernel shape/dtype sweeps vs the pure-jnp ref.py oracles
 (interpret=True executes the kernel bodies on CPU)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -25,6 +24,21 @@ def test_trisolve(nr, k, dtype):
     x = jnp.asarray(RNG.normal(size=(nr, k)), dtype)
     y = ops.trsm(u, x)
     yr = trsm_upper_ref(u, x)
+    tol = 1e-10 if dtype == jnp.float64 else 1e-4
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=tol,
+                               rtol=tol)
+
+
+@pytest.mark.parametrize("kb,nr,k", [(1, 5, 8), (4, 17, 13), (6, 3, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float64, jnp.float32])
+def test_trisolve_batched(kb, nr, k, dtype):
+    """Batched TRSM (repeated-solve path): K solves, one pallas program."""
+    from repro.kernels.trisolve import ops
+    from repro.kernels.trisolve.ref import trsm_upper_ref_batched
+    u = jnp.stack([_tri(k, dtype) for _ in range(kb)])
+    x = jnp.asarray(RNG.normal(size=(kb, nr, k)), dtype)
+    y = ops.trsm_batched(u, x)
+    yr = trsm_upper_ref_batched(u, x)
     tol = 1e-10 if dtype == jnp.float64 else 1e-4
     np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=tol,
                                rtol=tol)

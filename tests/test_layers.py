@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hyp import given, settings, st
 
 from repro.configs import registry
 from repro.configs.base import ArchConfig, MoECfg

@@ -1,7 +1,7 @@
 """MC64 matching + scaling invariants (paper §2.1 static pivoting)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hyp import given, settings, st
 
 from repro.core.matrix import CSR
 from repro.core.matching import max_weight_matching, apply_static_pivoting

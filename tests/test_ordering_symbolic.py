@@ -1,7 +1,7 @@
 """Ordering + symbolic factorization + supernode invariants (§2.1)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hyp import given, settings, st
 
 from repro.core.matrix import CSR
 from repro.core.ordering import (min_degree, rcm, nested_dissection,

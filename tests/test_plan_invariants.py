@@ -10,7 +10,7 @@ Invariants (hypothesis over random sparse systems):
 """
 import numpy as np
 import scipy.sparse as sp
-from hypothesis import given, settings, strategies as st
+from tests._hyp import given, settings, st
 
 from repro.core.api import HyluOptions, analyze
 from repro.core.matrix import CSR

@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 import scipy.sparse as sp
 import scipy.sparse.linalg as spla
-from hypothesis import given, settings, strategies as st
+from tests._hyp import given, settings, st
 
 from repro.core.matrix import CSR
 from repro.core.api import (HyluOptions, analyze, factor, refactor, solve,

@@ -8,6 +8,12 @@ with drifting values — the circuit-simulation workload HYLU's headline
   jitted-jax   K × pre-compiled XLA refactor calls (engine="jax")
   batched-jax  one vmapped XLA program for all K (factor_batched)
 
+plus a solve-phase section comparing the fused on-device batched solve
+(substitution + CSR residual matvec + the whole refinement loop as ONE
+XLA program, `solve_batched`) against the pre-fusion host-loop baseline
+(`api._solve_batched_hostloop`: one host round-trip per refinement
+iteration).
+
 Compile time is reported separately: it is part of the one-time analysis
 cost, amortized over the thousands of steps of a transient run.
 
@@ -28,7 +34,8 @@ import numpy as np
 jax.config.update("jax_enable_x64", True)
 
 from repro.core import CSR, analyze, factor, refactor, solve
-from repro.core.api import factor_batched, solve_batched, jax_repeated_engine
+from repro.core.api import (factor_batched, solve_batched,
+                            _solve_batched_hostloop, jax_repeated_engine)
 from repro.core.ref_engine import factor_value_loop
 
 from . import matrices
@@ -103,6 +110,45 @@ def bench_matrix(name, Ac, k):
     x, info = solve_batched(bst, bb)
     rec["end2end_jax_batched_s"] = time.perf_counter() - t0
 
+    # ---- solve phase: fused on-device refinement vs the host-loop baseline
+    # (device substitution + numpy residual matvec + Python refine loop) ----
+    reps = 5
+    _solve_batched_hostloop(bst, bb)             # warm the scalar apply path
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        _solve_batched_hostloop(bst, bb)
+    rec["solve_hostloop_s"] = (time.perf_counter() - t0) / reps
+    solve_batched(bst, bb)                       # fused program is compiled
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        x, info = solve_batched(bst, bb)
+    rec["solve_fused_s"] = (time.perf_counter() - t0) / reps
+    rec["solve_n_refine"] = int(info["n_refine"])
+    rec["speedup_solve_fused"] = (rec["solve_hostloop_s"]
+                                  / rec["solve_fused_s"])
+
+    # refinement-engaged: tol=0 forces the loop to iterate until it stalls,
+    # so the per-iteration host round-trip of the baseline is actually on
+    # the clock (tol is a dynamic arg — no recompile)
+    tol_saved = an.opts.refine_tol
+    an.opts.refine_tol = 0.0
+    try:
+        _solve_batched_hostloop(bst, bb, refine=True)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            _, info_h = _solve_batched_hostloop(bst, bb, refine=True)
+        rec["solve_refined_hostloop_s"] = (time.perf_counter() - t0) / reps
+        solve_batched(bst, bb, refine=True)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            _, info_f = solve_batched(bst, bb, refine=True)
+        rec["solve_refined_fused_s"] = (time.perf_counter() - t0) / reps
+        rec["solve_refined_n_iter"] = int(info_f["n_refine"])
+        rec["speedup_solve_refined_fused"] = (
+            rec["solve_refined_hostloop_s"] / rec["solve_refined_fused_s"])
+    finally:
+        an.opts.refine_tol = tol_saved
+
     for which in ("jax_jit", "jax_batched"):
         rec[f"speedup_refac_{which}"] = (rec["refac_ref_loop_s"]
                                          / rec[f"refac_{which}_s"])
@@ -134,6 +180,10 @@ def bench_repeated(k=32, quick=False, out_path="BENCH_repeated.json"):
               f"jit={r['refac_jax_jit_s']*1e3:7.1f}ms "
               f"batched={r['refac_jax_batched_s']*1e3:7.1f}ms "
               f"({r['speedup_refac_jax_batched']:.1f}x) "
+              f"solve host={r['solve_hostloop_s']*1e3:6.1f}ms "
+              f"fused={r['solve_fused_s']*1e3:6.1f}ms "
+              f"({r['speedup_solve_fused']:.1f}x; refined "
+              f"{r['speedup_solve_refined_fused']:.1f}x) "
               f"[{time.time()-t0:.0f}s]", flush=True)
 
     summary = {
@@ -145,6 +195,10 @@ def bench_repeated(k=32, quick=False, out_path="BENCH_repeated.json"):
             [r["speedup_end2end_jax_jit"] for r in records.values()]),
         "end2end_batched": _geomean(
             [r["speedup_end2end_jax_batched"] for r in records.values()]),
+        "solve_fused": _geomean(
+            [r["speedup_solve_fused"] for r in records.values()]),
+        "solve_refined_fused": _geomean(
+            [r["speedup_solve_refined_fused"] for r in records.values()]),
     }
     out = dict(k=k, matrices=records, geomean_speedup_over_ref_loop=summary)
     with open(out_path, "w") as f:

@@ -82,7 +82,9 @@ class BatchedFactorState:
     stacked device arrays — the state of the batched repeated-solve path."""
     analysis: Analysis
     a_pattern: tuple           # (indptr, indices) of the original matrices
-    values_batch: np.ndarray   # (K, nnz) original A values (residual checks)
+    values_batch: np.ndarray   # (K, nnz) original A values (host oracle)
+    values_dev: object         # jax (K, nnz) device copy (fused residuals —
+                               # uploaded once, not per solve)
     vals: object               # jax (K, total_slots) factored panel buffers
     inode_perm: object         # jax (K, n) in-node pivot permutations
     n_perturb: np.ndarray      # (K,) perturbation counts
@@ -312,19 +314,30 @@ def _pattern_of(a_pattern) -> tuple:
 def _batched_matvec(pattern: tuple, values_batch: np.ndarray,
                     x_batch: np.ndarray) -> np.ndarray:
     """(A_k x_k) for K CSR matrices sharing one pattern: one gather +
-    row-segment reduction for the whole batch."""
+    row-segment reduction for the whole batch.
+
+    Host-side (numpy) reference: the production jax path computes residuals
+    with the device matvec baked into the fused solver
+    (``jax_engine.make_csr_matvec_batched``); this stays as the oracle for
+    tests and as the host-loop benchmark baseline.  x_batch is (K, n) or
+    (K, n, m) multi-RHS."""
     indptr, indices = pattern
-    prod = values_batch * x_batch[:, indices]
+    if x_batch.ndim == 3:
+        prod = values_batch[:, :, None] * x_batch[:, indices]
+    else:
+        prod = values_batch * x_batch[:, indices]
     counts = np.diff(indptr)
     if len(counts) == 0:
         return np.zeros_like(x_batch)
     if counts.min() > 0:
         return np.add.reduceat(prod, indptr[:-1], axis=1)
-    # reduceat mishandles empty rows; fall back to bincount per batch entry
+    # reduceat mishandles empty rows; fall back to per-batch scatter-add
+    # (preserves the batch dtype, unlike bincount which promotes to float64)
     seg = np.repeat(np.arange(len(counts)), counts)
-    out = np.zeros((x_batch.shape[0], len(counts)))
+    out = np.zeros((x_batch.shape[0], len(counts)) + x_batch.shape[2:],
+                   dtype=prod.dtype)
     for k in range(out.shape[0]):
-        out[k] = np.bincount(seg, weights=prod[k], minlength=len(counts))
+        np.add.at(out[k], seg, prod[k])
     return out
 
 
@@ -340,21 +353,61 @@ def factor_batched(an: Analysis, a_pattern, values_batch) -> BatchedFactorState:
         np.atleast_2d(np.asarray(values_batch, dtype=np.float64)))
     t = {}
     t0 = time.perf_counter()
-    jf = eng.refactor_batched(jnp.asarray(values_batch))
+    values_dev = jnp.asarray(values_batch)
+    jf = eng.refactor_batched(values_dev)
     jax.block_until_ready(jf.vals)
     t["factor_batched"] = time.perf_counter() - t0
     return BatchedFactorState(
         analysis=an, a_pattern=_pattern_of(a_pattern),
-        values_batch=values_batch, vals=jf.vals, inode_perm=jf.inode_perm,
+        values_batch=values_batch, values_dev=values_dev,
+        vals=jf.vals, inode_perm=jf.inode_perm,
         n_perturb=np.asarray(jf.n_perturb), timings=t)
 
 
 def solve_batched(bst: BatchedFactorState, b_batch: np.ndarray,
                   refine: bool | None = None) -> tuple:
-    """Batched substitution + iterative refinement: X[k] solves
-    A_k x = b_k against the K stored factorizations.  b_batch: (K, n) or
-    (n,) broadcast across the batch.  Returns (X, info) with per-system
-    residuals."""
+    """Batched substitution + iterative refinement, fused on device: X[k]
+    solves A_k x = b_k against the K stored factorizations as ONE
+    pre-compiled XLA program — substitution, the batched CSR residual
+    matvec (pattern as compile-time constants) and the whole refinement
+    loop (``lax.while_loop`` with per-system improved/converged masking)
+    execute without any per-iteration host transfer.
+
+    b_batch: (K, n), (n,) broadcast across the batch, or (K, n, m)
+    multi-RHS (adjoint/sensitivity workloads).  Returns (X, info);
+    info["residual"] is (K,) — or (K, m) for multi-RHS — and
+    info["n_refine_per_system"] counts accepted refinement steps per
+    system/RHS.  refine=False skips refinement; refine=None/True runs it
+    until converged, stalled, or refine_max_iter."""
+    import jax.numpy as jnp
+
+    an = bst.analysis
+    opts = an.opts
+    eng = jax_repeated_engine(an)
+    t0 = time.perf_counter()
+    b_batch = np.asarray(b_batch, dtype=np.float64)
+    if b_batch.ndim == 1:
+        b_batch = np.broadcast_to(b_batch, (bst.k, b_batch.shape[0]))
+    solver = eng.refined_batched_solver(*bst.a_pattern)
+    max_iter = 0 if refine is False else opts.refine_max_iter
+    x, resid, n_iter, n_ref_sys = solver(
+        bst.vals, bst.inode_perm, bst.values_dev,
+        jnp.asarray(b_batch), max_iter, opts.refine_tol)
+    x = np.asarray(x)
+    info = dict(residual=np.asarray(resid), n_refine=int(n_iter),
+                n_refine_per_system=np.asarray(n_ref_sys),
+                n_perturb=bst.n_perturb,
+                solve_time=time.perf_counter() - t0)
+    return x, info
+
+
+def _solve_batched_hostloop(bst: BatchedFactorState, b_batch: np.ndarray,
+                            refine: bool | None = None) -> tuple:
+    """Pre-fusion reference implementation of :func:`solve_batched`: device
+    substitution but numpy residuals and a Python refinement loop (one
+    host round-trip per iteration).  Kept as the benchmark baseline the
+    fused path is measured against, and as a parity oracle — same
+    per-system improved/converged masking, same multi-RHS shapes."""
     import jax.numpy as jnp
 
     an = bst.analysis
@@ -369,28 +422,28 @@ def solve_batched(bst: BatchedFactorState, b_batch: np.ndarray,
         r = b_batch - _batched_matvec(bst.a_pattern, bst.values_batch, x)
         return r, np.abs(r).sum(axis=1) / bnorm
 
-    bnorm = np.abs(b_batch).sum(axis=1)
+    bnorm = np.abs(b_batch).sum(axis=1)          # (K,) or (K, m)
     bnorm = np.where(bnorm == 0.0, 1.0, bnorm)
     x = np.asarray(eng.apply_batched(bst.vals, bst.inode_perm,
                                      jnp.asarray(b_batch)))
     r, resid = residuals(x)
     n_ref = 0
-    do_refine = refine if refine is not None else bool(
-        np.any(bst.n_perturb > 0) or np.any(resid > opts.refine_tol))
-    if do_refine:
-        for _ in range(opts.refine_max_iter):
-            if np.all(resid <= opts.refine_tol):
-                break
-            x2 = x + np.asarray(eng.apply_batched(bst.vals, bst.inode_perm,
-                                                  jnp.asarray(r)))
-            r2, resid2 = residuals(x2)
-            n_ref += 1
-            improved = resid2 < resid
-            if not improved.any():
-                break
-            x = np.where(improved[:, None], x2, x)
-            resid = np.where(improved, resid2, resid)
-            r = np.where(improved[:, None], r2, r)
+    alive = np.ones(resid.shape, bool)
+    max_iter = 0 if refine is False else opts.refine_max_iter
+    for _ in range(max_iter):
+        need = alive & (resid > opts.refine_tol)
+        if not need.any():
+            break
+        x2 = x + np.asarray(eng.apply_batched(bst.vals, bst.inode_perm,
+                                              jnp.asarray(r)))
+        r2, resid2 = residuals(x2)
+        n_ref += 1
+        improved = resid2 < resid
+        upd = need & improved                     # mirror the fused masking
+        x = np.where(upd[:, None], x2, x)
+        r = np.where(upd[:, None], r2, r)
+        resid = np.where(upd, resid2, resid)
+        alive = alive & (improved | ~need)
     info = dict(residual=resid, n_refine=n_ref, n_perturb=bst.n_perturb,
                 solve_time=time.perf_counter() - t0)
     return x, info
@@ -406,7 +459,8 @@ def solve_sequence(a_pattern, values_batch, b_batch,
     values_batch  (K, nnz) value sets; values_batch[0] seeds the analysis
                   (matching/ordering are value-dependent but stable across
                   the mild value drift of Newton/transient sequences)
-    b_batch       (K, n) right-hand sides, or (n,) broadcast
+    b_batch       (K, n) right-hand sides, (n,) broadcast, or (K, n, m)
+                  multi-RHS (adjoint/sensitivity sweeps)
     """
     values_batch = np.atleast_2d(np.asarray(values_batch, dtype=np.float64))
     pattern = _pattern_of(a_pattern)

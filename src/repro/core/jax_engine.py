@@ -196,23 +196,30 @@ def make_lu_solver(ss, dtype=jnp.float64):
 # batched repeated-solve path: K factorizations + K solves, one XLA program
 # --------------------------------------------------------------------------
 def _tri_solve_batched(sched, vals, rhs, diag_slots=None):
-    """Batched level-scheduled substitution: vals (K, slots), rhs (K, n).
+    """Batched level-scheduled substitution: vals (K, slots), rhs (K, n) or
+    (K, n, m) for multi-RHS.
 
     Same schedule as ``_tri_solve`` but each level's gather + segment-sum is
-    vectorized over the batch as well — one (K, m) product and one
-    segment-sum per level for the whole batch, instead of K programs."""
+    vectorized over the batch (and any trailing RHS dim) as well — one
+    product and one segment-sum per level for the whole batch, instead of
+    K programs."""
     w = rhs
+    multi = w.ndim == 3
     for rows, cols, slot, seg in zip(sched.rows, sched.cols, sched.slot,
                                      sched.seg):
         if len(cols):
-            prod = vals[:, slot] * w[:, cols]                        # (K, m)
-            acc = jax.ops.segment_sum(prod.T, seg,
-                                      num_segments=len(rows)).T      # (K, r)
+            v = vals[:, slot]
+            prod = v[:, :, None] * w[:, cols] if multi else v * w[:, cols]
+            acc = jnp.moveaxis(
+                jax.ops.segment_sum(jnp.moveaxis(prod, 1, 0), seg,
+                                    num_segments=len(rows)), 0, 1)
         if diag_slots is None:          # unit-diagonal L
             if len(cols):
                 w = w.at[:, rows].add(-acc)
         else:
             d = vals[:, diag_slots[rows]]
+            if multi:
+                d = d[:, :, None]
             if len(cols):
                 w = w.at[:, rows].set((w[:, rows] - acc) / d)
             else:
@@ -220,13 +227,85 @@ def _tri_solve_batched(sched, vals, rhs, diag_slots=None):
     return w
 
 
-def make_batched_lu_solver(ss, dtype=jnp.float64):
-    """Batched variant of :func:`make_lu_solver` over (K, slots)/(K, n)."""
+def _block_lu_solve_batched(blocks, vals, c, interpret=True):
+    """Batched L U w = c following the node-block schedule: per node one
+    dense GEMV against the L-prefix/U-suffix rectangle plus a dense
+    triangular solve of the diagonal block — routed through the Pallas TRSM
+    (``kernels/trisolve``) for supernodes.  This is the ``use_pallas``
+    substitution path; width-1 nodes degenerate to scalar ops."""
+    from repro.kernels.trisolve import ops as trisolve_ops
+
+    multi = c.ndim == 3
+    w = c if multi else c[..., None]
+    for nd in blocks:                               # forward: unit-lower L
+        b_blk = w[:, nd.r0:nd.r0 + nd.nr]
+        if nd.pre_cols.size:
+            b_blk = b_blk - jnp.einsum("kns,ksm->knm",
+                                       vals[:, nd.pre_slots],
+                                       w[:, nd.pre_cols])
+        if nd.nr > 1:
+            b_blk = trisolve_ops.trsm_left_unit_lower_batched(
+                vals[:, nd.blk_slots], b_blk, interpret=interpret)
+        w = w.at[:, nd.r0:nd.r0 + nd.nr].set(b_blk)
+    for nd in reversed(blocks):                     # backward: upper U
+        b_blk = w[:, nd.r0:nd.r0 + nd.nr]
+        if nd.suf_cols.size:
+            b_blk = b_blk - jnp.einsum("kns,ksm->knm",
+                                       vals[:, nd.suf_slots],
+                                       w[:, nd.suf_cols])
+        blk = vals[:, nd.blk_slots]
+        if nd.nr > 1:
+            b_blk = trisolve_ops.trsm_left_upper_batched(
+                blk, b_blk, interpret=interpret)
+        else:
+            b_blk = b_blk / blk[:, :, 0:1]
+        w = w.at[:, nd.r0:nd.r0 + nd.nr].set(b_blk)
+    return w if multi else w[..., 0]
+
+
+def make_batched_lu_solver(ss, dtype=jnp.float64, use_pallas: bool = False,
+                           interpret: bool = True):
+    """Batched variant of :func:`make_lu_solver` over (K, slots)/(K, n)
+    (or (K, n, m) multi-RHS).  ``use_pallas=True`` swaps the level-scheduled
+    segment-sum substitution for the node-block schedule whose supernode
+    diagonal blocks run on the Pallas TRSM kernel."""
+    if use_pallas:
+        def lu_solve_batched(vals, c):
+            return _block_lu_solve_batched(ss.blocks, vals,
+                                           c.astype(vals.dtype),
+                                           interpret=interpret)
+        return lu_solve_batched
+
     def lu_solve_batched(vals, c):
         y = _tri_solve_batched(ss.l_fwd, vals, c.astype(vals.dtype))
         return _tri_solve_batched(ss.u_bwd, vals, y,
                                   diag_slots=ss.lu.u_diag_slots)
     return lu_solve_batched
+
+
+def make_csr_matvec_batched(indptr, indices):
+    """Device-side batched CSR matvec with the pattern baked in as
+    compile-time constants: ``(A_k x_k)`` for K matrices sharing one
+    sparsity pattern, x (K, n) or (K, n, m).
+
+    One gather + one segment-sum for the whole batch; empty rows fall out
+    of the segment-sum as exact zeros (no host fallback), and the batch
+    dtype is preserved.  This is the residual matvec of the fused
+    refinement loop — it keeps r = b - A x on device."""
+    indptr = np.asarray(indptr)
+    indices = np.asarray(indices)
+    n = len(indptr) - 1
+    seg = jnp.asarray(np.repeat(np.arange(n), np.diff(indptr)))
+    idx = jnp.asarray(indices)
+
+    def matvec(a_vals, x):
+        prod = (a_vals[:, :, None] * x[:, idx] if x.ndim == 3
+                else a_vals * x[:, idx])
+        return jnp.moveaxis(
+            jax.ops.segment_sum(jnp.moveaxis(prod, 1, 0), seg,
+                                num_segments=n), 0, 1)
+
+    return matvec
 
 
 def make_permuted_apply(lu_solve, n, p, q, row_scale, col_scale,
@@ -267,8 +346,19 @@ class RepeatedSolveEngine:
       apply(vals, inode_perm, b)       -> x   solving A x = b with the stored
                                               factors (scales + permutations
                                               + LU substitution fused)
-      apply_batched(vals, inode, B)    -> X   (K, n) via the natively batched
-                                              level-scheduled tri-solve
+      apply_batched(vals, inode, B)    -> X   (K, n) — or (K, n, m) for
+                                              multi-RHS — via the natively
+                                              batched tri-solve (segment-sum
+                                              levels, or the Pallas-TRSM
+                                              node-block path when
+                                              ``use_pallas=True``)
+      refined_batched_solver(ip, ix)   -> the *fused* batched solve:
+                                              substitution + device CSR
+                                              residual matvec + the whole
+                                              iterative-refinement loop as
+                                              ONE jitted XLA program
+                                              (lax.while_loop; zero host
+                                              transfers per iteration)
 
     All index maps (scatter/gather, permutations, level schedules) are
     compile-time constants; only values flow through the program, so one
@@ -291,7 +381,9 @@ class RepeatedSolveEngine:
         factor_fn = make_factor_fn(plan, perturb_eps=perturb_eps, dtype=dtype,
                                    use_pallas=use_pallas, interpret=interpret)
         lu_solve, lut_solve = make_lu_solver(ss, dtype=dtype)
-        lu_solve_b = make_batched_lu_solver(ss, dtype=dtype)
+        lu_solve_b = make_batched_lu_solver(ss, dtype=dtype,
+                                            use_pallas=use_pallas,
+                                            interpret=interpret)
         src = jnp.asarray(src_map)
         scl = jnp.asarray(scale_map, dtype=dtype)
         p_ = jnp.asarray(p)
@@ -308,15 +400,90 @@ class RepeatedSolveEngine:
                                      dtype=dtype)
 
         def _apply_batched(vals, inode_perm, b):
-            c = (r_ * b.astype(dtype))[:, p_]
-            c = jnp.take_along_axis(c, inode_perm, axis=1)
+            multi = b.ndim == 3                    # (K, n, m) multi-RHS
+            c = (b.astype(dtype) * (r_[:, None] if multi else r_))[:, p_]
+            idx = inode_perm[:, :, None] if multi else inode_perm
+            c = jnp.take_along_axis(c, idx, axis=1)
             w = lu_solve_b(vals, c)
             z = jnp.zeros_like(w).at[:, p_].set(w)
             y = jnp.zeros_like(z).at[:, q_].set(z)
-            return s_ * y
+            return y * (s_[:, None] if multi else s_)
 
+        self._apply_batched_impl = _apply_batched
         self.refactor = jax.jit(_refactor)
         self.refactor_batched = jax.jit(jax.vmap(_refactor))
         self.apply = jax.jit(_apply)
         self.apply_batched = jax.jit(_apply_batched)
         self.lut_solve = jax.jit(lut_solve)
+        self._refined_cache: dict = {}
+
+    def refined_batched_solver(self, indptr, indices):
+        """The fused batched solve for K systems sharing the given original-A
+        pattern (compile-time constants).  Returns a jitted
+
+            solver(vals, inode_perm, a_vals, b, max_iter, tol)
+                -> (x, resid, n_iter, n_ref_sys)
+
+        that runs substitution, the batched CSR residual matvec and the full
+        iterative-refinement loop as ONE XLA program: a ``lax.while_loop``
+        carries ``(x, r, resid, alive, ...)`` with per-system improved /
+        converged masking, so no per-iteration host transfer happens.
+
+        b is (K, n) or (K, n, m) multi-RHS; resid / n_ref_sys are (K,) or
+        (K, m) accordingly (1-norm residuals relative to each RHS column).
+        A system (or RHS column) stops refining once its residual is at or
+        below ``tol`` or an iteration fails to improve it — the same
+        acceptance rule as the scalar host path.  ``max_iter=0`` disables
+        refinement (refine=False)."""
+        indptr = np.asarray(indptr)
+        indices = np.asarray(indices)
+        key = (indptr.tobytes(), indices.tobytes())
+        solver = self._refined_cache.get(key)
+        if solver is not None:
+            return solver
+
+        matvec = make_csr_matvec_batched(indptr, indices)
+        apply_b = self._apply_batched_impl
+        dtype = self.dtype
+
+        def solve_refined(vals, inode_perm, a_vals, b, max_iter, tol):
+            multi = b.ndim == 3
+            b = b.astype(dtype)
+            a_vals = a_vals.astype(dtype)
+            bnorm = jnp.sum(jnp.abs(b), axis=1)              # (K,) | (K, m)
+            bnorm = jnp.where(bnorm == 0.0, 1.0, bnorm)
+
+            def expand(m):                 # mask (K,)|(K,m) -> broadcast to b
+                return m[:, None, :] if multi else m[:, None]
+
+            x = apply_b(vals, inode_perm, b)
+            r = b - matvec(a_vals, x)
+            resid = jnp.sum(jnp.abs(r), axis=1) / bnorm
+            alive = jnp.ones(resid.shape, bool)
+            n_ref = jnp.zeros(resid.shape, jnp.int32)
+
+            def cond(carry):
+                _, _, resid, alive, _, it = carry
+                return (it < max_iter) & jnp.any(alive & (resid > tol))
+
+            def body(carry):
+                x, r, resid, alive, n_ref, it = carry
+                need = alive & (resid > tol)
+                x2 = x + apply_b(vals, inode_perm, r)
+                r2 = b - matvec(a_vals, x2)
+                resid2 = jnp.sum(jnp.abs(r2), axis=1) / bnorm
+                improved = resid2 < resid
+                upd = need & improved
+                x = jnp.where(expand(upd), x2, x)
+                r = jnp.where(expand(upd), r2, r)
+                resid = jnp.where(upd, resid2, resid)
+                alive = alive & (improved | ~need)
+                return x, r, resid, alive, n_ref + upd, it + 1
+
+            x, r, resid, alive, n_ref, it = jax.lax.while_loop(
+                cond, body, (x, r, resid, alive, n_ref, jnp.int32(0)))
+            return x, resid, it, n_ref
+
+        solver = jax.jit(solve_refined)
+        self._refined_cache[key] = solver
+        return solver

@@ -117,6 +117,43 @@ def tri_schedule(n, indptr, indices, slots, lower: bool,
 
 
 @dataclasses.dataclass
+class BlockNode:
+    """Static per-node gather maps for the block (panel) substitution path.
+
+    The dense diagonal block (``blk_slots``) and the off-block L-prefix /
+    U-suffix rectangles are read straight out of the flat panel buffer with
+    these compile-time index matrices, so a solve can run node-by-node as
+    dense GEMV/TRSM ops — the shape the Pallas TRSM kernel wants — instead
+    of row-by-row levels."""
+    r0: int
+    nr: int
+    pre_cols: np.ndarray    # (lsize,)  global cols of the L prefix
+    pre_slots: np.ndarray   # (nr, lsize) flat slots of the L prefix
+    suf_cols: np.ndarray    # (usize,)  global cols of the U suffix
+    suf_slots: np.ndarray   # (nr, usize) flat slots of the U suffix
+    blk_slots: np.ndarray   # (nr, nr) flat slots of the dense diagonal block
+                            # (strict lower = L values, upper incl. diag = U)
+
+
+def block_schedule(plan: FactorPlan) -> list:
+    """Per-node block maps, ascending r0 (forward L order; reverse for U)."""
+    nodes = []
+    for nd in plan.nodes:
+        off = int(plan.panel_offset[nd.nid])
+        nr, w, ls = nd.nr, nd.width, nd.lsize
+        row = off + np.arange(nr, dtype=np.int64)[:, None] * w
+        nodes.append(BlockNode(
+            r0=nd.r0, nr=nr,
+            pre_cols=nd.pattern[:ls].astype(np.int64),
+            pre_slots=row + np.arange(ls, dtype=np.int64)[None, :],
+            suf_cols=nd.pattern[ls + nr:].astype(np.int64),
+            suf_slots=row + ls + nr + np.arange(nd.usize, dtype=np.int64)[None, :],
+            blk_slots=row + ls + np.arange(nr, dtype=np.int64)[None, :],
+        ))
+    return nodes
+
+
+@dataclasses.dataclass
 class SolveStructure:
     """Everything the JAX solve/adjoint needs, all static."""
     n: int
@@ -125,6 +162,7 @@ class SolveStructure:
     u_bwd: TriSched       # U w = y      (backward)
     lt_bwd: TriSched      # Lᵀ w = y     (backward; adjoint path)
     ut_fwd: TriSched      # Uᵀ y = c     (forward;  adjoint path)
+    blocks: list          # list[BlockNode] — dense-block path (Pallas TRSM)
 
 
 def build_solve_structure(plan: FactorPlan, bulk_min_width: int = 8) -> SolveStructure:
@@ -141,4 +179,5 @@ def build_solve_structure(plan: FactorPlan, bulk_min_width: int = 8) -> SolveStr
     ut_fwd = tri_schedule(n, ut_ip, ut_ix, ut_sl, lower=True,
                           bulk_min_width=bulk_min_width)
     return SolveStructure(n=n, lu=lu, l_fwd=l_fwd, u_bwd=u_bwd,
-                          lt_bwd=lt_bwd, ut_fwd=ut_fwd)
+                          lt_bwd=lt_bwd, ut_fwd=ut_fwd,
+                          blocks=block_schedule(plan))

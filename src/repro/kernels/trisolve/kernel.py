@@ -18,27 +18,34 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _trsm_kernel(u_ref, x_ref, y_ref, *, k: int):
+def _trsm_kernel(u_ref, x_ref, y_ref, *, k: int, unit_diag: bool):
     x = x_ref[...]
     u = u_ref[...]
 
     def body(j, y):
         acc = x[:, j] - y @ u[:, j]
-        return y.at[:, j].set(acc / u[j, j])
+        if not unit_diag:
+            acc = acc / u[j, j]
+        return y.at[:, j].set(acc)
 
     y = jax.lax.fori_loop(0, k, body, jnp.zeros_like(x))
     y_ref[...] = y
 
 
-@functools.partial(jax.jit, static_argnames=("tile_nr", "interpret"))
+@functools.partial(jax.jit, static_argnames=("tile_nr", "interpret",
+                                             "unit_diag"))
 def trsm_upper(u: jax.Array, x: jax.Array, tile_nr: int = 256,
-               interpret: bool = True) -> jax.Array:
-    """Solve Y @ U = X. u: (k, k) upper-tri; x: (nr, k)."""
+               interpret: bool = True, unit_diag: bool = False) -> jax.Array:
+    """Solve Y @ U = X. u: (k, k) upper-tri; x: (nr, k).
+
+    ``unit_diag=True`` treats U's diagonal as implicit ones (skips the
+    per-column divide) — the shape of the unit-lower left-solve that the
+    engine's block substitution routes through this kernel transposed."""
     nr, k = x.shape
     tile = min(tile_nr, max(nr, 1))
     grid = (pl.cdiv(nr, tile),)
     return pl.pallas_call(
-        functools.partial(_trsm_kernel, k=k),
+        functools.partial(_trsm_kernel, k=k, unit_diag=unit_diag),
         grid=grid,
         in_specs=[
             pl.BlockSpec((k, k), lambda i: (0, 0)),        # U resident

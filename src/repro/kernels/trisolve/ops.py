@@ -1,14 +1,33 @@
-"""jit'd wrapper for the TRSM Pallas kernel (padding to TPU-friendly tiles)."""
+"""jit'd wrappers for the TRSM Pallas kernel (padding to TPU-friendly tiles).
+
+Besides the raw right-solve (Y @ U = X) this exposes the two *left*-solve
+shapes the engine's block substitution needs — U·w = b and (unit) L·w = b,
+batched over K systems — expressed on the same Pallas kernel through the
+transpose/flip identities
+
+    L w = b           ⇔  wᵀ = bᵀ · (Lᵀ)⁻¹          (Lᵀ upper, unit diag)
+    U w = b           ⇔  (Jw)ᵀ = (Jb)ᵀ · ((JUJ)ᵀ)⁻¹  (J U ᵀ J upper)
+
+where J is the row-flip. These are what ``jax_engine`` routes the bulk
+supernode diagonal blocks through when ``use_pallas=True`` (interpret mode
+on CPU; compiled on real TPUs).
+"""
 import jax
 import jax.numpy as jnp
 
 from .kernel import trsm_upper
-from .ref import trsm_upper_ref, trsm_upper_ref_batched
+from .ref import (trsm_upper_ref, trsm_upper_ref_batched,
+                  trsm_left_upper_ref_batched,
+                  trsm_left_unit_lower_ref_batched)
 
-__all__ = ["trsm", "trsm_batched", "trsm_upper_ref", "trsm_upper_ref_batched"]
+__all__ = ["trsm", "trsm_batched", "trsm_left_upper_batched",
+           "trsm_left_unit_lower_batched", "trsm_upper_ref",
+           "trsm_upper_ref_batched", "trsm_left_upper_ref_batched",
+           "trsm_left_unit_lower_ref_batched"]
 
 
-def trsm(u: jax.Array, x: jax.Array, interpret: bool = True) -> jax.Array:
+def trsm(u: jax.Array, x: jax.Array, interpret: bool = True,
+         unit_diag: bool = False) -> jax.Array:
     """Solve Y @ U = X with the Pallas kernel. Pads k to a multiple of 8
     (sublane) — padded diagonal is identity so the solve is unaffected."""
     nr, k = x.shape
@@ -16,18 +35,17 @@ def trsm(u: jax.Array, x: jax.Array, interpret: bool = True) -> jax.Array:
     if kp != k:
         u_p = jnp.eye(kp, dtype=u.dtype).at[:k, :k].set(u)
         x_p = jnp.zeros((nr, kp), x.dtype).at[:, :k].set(x)
-        return trsm_upper(u_p, x_p, interpret=interpret)[:, :k]
-    return trsm_upper(u, x, interpret=interpret)
+        return trsm_upper(u_p, x_p, interpret=interpret,
+                          unit_diag=unit_diag)[:, :k]
+    return trsm_upper(u, x, interpret=interpret, unit_diag=unit_diag)
 
 
-def trsm_batched(u: jax.Array, x: jax.Array, interpret: bool = True) -> jax.Array:
+def trsm_batched(u: jax.Array, x: jax.Array, interpret: bool = True,
+                 unit_diag: bool = False) -> jax.Array:
     """Batched TRSM: u (K, k, k), x (K, nr, k) — K independent panel solves
-    through one vmapped pallas_call.
-
-    Standalone building block for a future Pallas-batched factorization
-    path; the current batched engine (`jax_engine.RepeatedSolveEngine`)
-    vmaps the whole factor program and uses the segment-sum batched
-    tri-solve for substitution, so this op is not yet on that path."""
+    through one vmapped pallas_call.  This is the op behind the engine's
+    ``use_pallas`` block-substitution path (via the left-solve wrappers
+    below) and the supernode panel updates."""
     nr, k = x.shape[-2:]
     kp = max(8, -(-k // 8) * 8)
     if kp != k:
@@ -36,7 +54,32 @@ def trsm_batched(u: jax.Array, x: jax.Array, interpret: bool = True) -> jax.Arra
                .at[:, jnp.arange(kp), jnp.arange(kp)].set(1.0)
                .at[:, :k, :k].set(u))
         x_p = jnp.zeros((kb, nr, kp), x.dtype).at[:, :, :k].set(x)
-        y = jax.vmap(lambda uu, xx: trsm_upper(uu, xx, interpret=interpret))(
-            u_p, x_p)
+        y = jax.vmap(lambda uu, xx: trsm_upper(uu, xx, interpret=interpret,
+                                               unit_diag=unit_diag))(u_p, x_p)
         return y[:, :, :k]
-    return jax.vmap(lambda uu, xx: trsm_upper(uu, xx, interpret=interpret))(u, x)
+    return jax.vmap(lambda uu, xx: trsm_upper(uu, xx, interpret=interpret,
+                                              unit_diag=unit_diag))(u, x)
+
+
+def trsm_left_unit_lower_batched(blk: jax.Array, b: jax.Array,
+                                 interpret: bool = True) -> jax.Array:
+    """Solve L[i] @ w[i] = b[i] with L = tril(blk[i], -1) + I.
+
+    blk (K, k, k) dense diagonal blocks straight from the panel buffer
+    (upper part, which holds U values, is ignored); b (K, k, m)."""
+    lt = jnp.triu(jnp.swapaxes(blk, 1, 2), 1)          # Lᵀ, strict upper
+    y = trsm_batched(lt, jnp.swapaxes(b, 1, 2), interpret=interpret,
+                     unit_diag=True)                    # (K, m, k) = wᵀ
+    return jnp.swapaxes(y, 1, 2)
+
+
+def trsm_left_upper_batched(blk: jax.Array, b: jax.Array,
+                            interpret: bool = True) -> jax.Array:
+    """Solve U[i] @ w[i] = b[i] with U = triu(blk[i]).
+
+    blk (K, k, k) dense diagonal blocks straight from the panel buffer
+    (strict lower part, which holds L values, is ignored); b (K, k, m)."""
+    u_flip = jnp.flip(jnp.swapaxes(jnp.triu(blk), 1, 2), axis=(1, 2))
+    y = trsm_batched(u_flip, jnp.swapaxes(jnp.flip(b, axis=1), 1, 2),
+                     interpret=interpret)               # (K, m, k) = (Jw)ᵀ
+    return jnp.flip(jnp.swapaxes(y, 1, 2), axis=1)

@@ -25,3 +25,28 @@ def trsm_upper_ref_batched(u: jax.Array, x: jax.Array) -> jax.Array:
         return y.at[..., j].set(acc / u[:, j, j][:, None])
 
     return jax.lax.fori_loop(0, k, body, jnp.zeros_like(x))
+
+
+def trsm_left_upper_ref_batched(blk: jax.Array, b: jax.Array) -> jax.Array:
+    """Left-solve oracle: U[i] @ w[i] = b[i] with U = triu(blk[i]).
+    blk (K, k, k) dense (strict lower ignored); b (K, k, m)."""
+    u = jnp.triu(blk)
+
+    def body(jj, w):
+        j = blk.shape[-1] - 1 - jj
+        acc = b[:, j] - jnp.einsum("bk,bkm->bm", u[:, j], w)
+        return w.at[:, j].set(acc / u[:, j, j][:, None])
+
+    return jax.lax.fori_loop(0, blk.shape[-1], body, jnp.zeros_like(b))
+
+
+def trsm_left_unit_lower_ref_batched(blk: jax.Array, b: jax.Array) -> jax.Array:
+    """Left-solve oracle: L[i] @ w[i] = b[i] with L = tril(blk[i], -1) + I.
+    blk (K, k, k) dense (upper incl. diag ignored); b (K, k, m)."""
+    l = jnp.tril(blk, -1)
+
+    def body(j, w):
+        acc = b[:, j] - jnp.einsum("bk,bkm->bm", l[:, j], w)
+        return w.at[:, j].set(acc)
+
+    return jax.lax.fori_loop(0, blk.shape[-1], body, jnp.zeros_like(b))

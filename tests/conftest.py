@@ -5,7 +5,12 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import jax  # noqa: E402
 
-jax.config.update("jax_enable_x64", True)
+# x64 on by default; the CI float32-only job sets JAX_ENABLE_X64=0 to prove
+# the engine's x64 guard raises instead of silently degrading (see
+# tests/test_x64_guard.py)
+jax.config.update("jax_enable_x64",
+                  os.environ.get("JAX_ENABLE_X64", "1").lower()
+                  not in ("0", "false"))
 
 import numpy as np  # noqa: E402
 import pytest  # noqa: E402

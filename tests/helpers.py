@@ -14,3 +14,105 @@ def random_system(n, density, seed, kind="general"):
     a = a.tocsr()
     b = rng.normal(size=n)
     return CSR.from_scipy(a), a, b
+
+
+# --------------------------------------------------------------------------
+# scenario matrix: the structurally distinct workloads the batched solver
+# must handle.  Each generator is deterministic in (n, seed) and returns a
+# nonsingular system; `expected_mode` is what kernel_select should route it
+# to at default thresholds (asserted by tests/test_kernel_select.py).
+# --------------------------------------------------------------------------
+def circuit_system(n=36, seed=0):
+    """Circuit-like: extremely sparse, strong diagonal, a few random
+    couplings per node (the KLU/NICSLU workload) → rowrow kernels."""
+    rng = np.random.default_rng(seed)
+    rows, cols = [], []
+    for i in range(n):
+        for j in rng.integers(0, n, 2):
+            if j != i:
+                rows.append(i); cols.append(int(j))
+    vals = rng.uniform(-1.0, 1.0, len(rows))
+    a = sp.coo_matrix((vals, (rows, cols)), shape=(n, n)).tocsr()
+    a = a + sp.diags(rng.uniform(2.0, 4.0, n) * rng.choice([-1, 1], n))
+    return a.tocsr()
+
+
+def banded_system(n=36, seed=0, half_bw=6):
+    """Banded/PDE-like: dense band of half-bandwidth `half_bw` (discretized
+    operator shape) — contiguous fill makes wide supernodes → hybrid."""
+    rng = np.random.default_rng(seed)
+    diags, offs = [], []
+    for o in range(-half_bw, half_bw + 1):
+        m = n - abs(o)
+        d = rng.uniform(-1.0, 1.0, m)
+        if o == 0:
+            d = rng.uniform(1.0, 2.0, m) * (2 * half_bw + 1)
+        diags.append(d); offs.append(o)
+    return sp.diags(diags, offs, shape=(n, n)).tocsr()
+
+
+def denseish_system(n=36, seed=0, density=0.5):
+    """Dense-ish: high fill-in, nearly full LU → hybrid with wide
+    supernodes."""
+    rng = np.random.default_rng(seed)
+    a = sp.random(n, n, density=density,
+                  random_state=np.random.RandomState(seed), format="csr")
+    a = a + sp.diags(rng.uniform(float(n) / 2, float(n), n))
+    return a.tocsr()
+
+
+def singleton_system(n=36, seed=0):
+    """Singleton-heavy: most rows carry only their diagonal (decoupled
+    unknowns), a small coupled core — exercises width-1 nodes and the
+    near-empty levels of the solve schedule → rowrow."""
+    rng = np.random.default_rng(seed)
+    core = max(4, n // 6)
+    rows, cols = [], []
+    for i in range(core):
+        for j in range(core):
+            if i != j and rng.random() < 0.5:
+                rows.append(i); cols.append(j)
+    vals = rng.uniform(-1.0, 1.0, len(rows))
+    a = sp.coo_matrix((vals, (rows, cols)), shape=(n, n)).tocsr()
+    a = a + sp.diags(rng.uniform(1.0, 3.0, n) * rng.choice([-1, 1], n))
+    return a.tocsr()
+
+
+# name -> (generator, routing_n, expected_mode). expected_mode is what
+# kernel_select routes the scenario to *at routing_n* with default
+# thresholds: banded/PDE bands have flops/nnz ≈ half-bandwidth ≪ 40, so at
+# test scale they are circuit-like by the NICSLU criterion (rowrow);
+# dense-ish crosses the flops/nnz threshold at n≈80 → hybrid.
+SCENARIOS = {
+    "circuit": (circuit_system, 48, "rowrow"),
+    "banded": (banded_system, 48, "rowrow"),
+    "denseish": (denseish_system, 80, "hybrid"),
+    "singleton": (singleton_system, 48, "rowrow"),
+}
+
+
+def scenario_system(name, n=36, seed=0):
+    """(CSR, scipy_csr, b, expected_mode) for one named scenario.
+    expected_mode refers to routing at SCENARIOS' routing_n, not n."""
+    gen, _, expected_mode = SCENARIOS[name]
+    a = gen(n=n, seed=seed)
+    b = np.random.default_rng(seed + 1).normal(size=n)
+    return CSR.from_scipy(a), a, b, expected_mode
+
+
+def empty_row_pattern(n=8, seed=0):
+    """A CSR *pattern* (indptr, indices, nnz) with genuinely empty rows —
+    not solvable, used to exercise the empty-row branches of the batched
+    matvec utilities."""
+    rng = np.random.default_rng(seed)
+    indptr = [0]
+    indices = []
+    for i in range(n):
+        if i % 3 == 0:                      # every third row empty
+            indptr.append(indptr[-1])
+            continue
+        cols = np.unique(rng.integers(0, n, 3))
+        indices.extend(cols.tolist())
+        indptr.append(len(indices))
+    return (np.asarray(indptr, dtype=np.int64),
+            np.asarray(indices, dtype=np.int64))

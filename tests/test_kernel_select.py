@@ -1,0 +1,119 @@
+"""kernel_select threshold routing, checked directly on the scenario matrix:
+each generated scenario lands on its expected mode, force_mode always wins,
+and rowrow re-runs symbolic with supernodes disabled (width-1 nodes).
+Also covers the host/device batched-matvec utilities' corner branches
+(empty rows, dtype preservation)."""
+import numpy as np
+import pytest
+
+from repro.core import CSR, HyluOptions, analyze
+from repro.core.api import _batched_matvec
+from repro.core.kernel_select import (select_kernel, FLOPS_PER_NNZ_ROWROW,
+                                      COVERAGE_ROWROW)
+from repro.core.matching import max_weight_matching
+
+from tests.helpers import SCENARIOS, scenario_system, empty_row_pattern
+
+MODES = ["rowrow", "hybrid", "supernodal"]
+
+
+@pytest.mark.parametrize("name", list(SCENARIOS))
+def test_scenario_routes_to_expected_mode(name):
+    gen, routing_n, expected = SCENARIOS[name]
+    Ac, _, _, _ = scenario_system(name, n=routing_n, seed=0)
+    an = analyze(Ac)
+    st = an.choice.stats
+    assert an.choice.mode == expected, (name, an.choice.reason)
+    # the routing must be explained by the thresholds, not accidental
+    if expected == "rowrow":
+        assert (st["flops_per_nnz"] < FLOPS_PER_NNZ_ROWROW
+                or st["supernode_coverage"] < COVERAGE_ROWROW), st
+    else:
+        assert st["flops_per_nnz"] >= FLOPS_PER_NNZ_ROWROW, st
+        assert st["supernode_coverage"] >= COVERAGE_ROWROW, st
+
+
+@pytest.mark.parametrize("name", list(SCENARIOS))
+@pytest.mark.parametrize("mode", MODES)
+def test_force_mode_always_wins(name, mode):
+    Ac, _, _, _ = scenario_system(name, n=24, seed=1)
+    an = analyze(Ac, HyluOptions(force_mode=mode))
+    assert an.choice.mode == mode
+    assert an.choice.reason == "forced"
+
+
+@pytest.mark.parametrize("name", list(SCENARIOS))
+def test_rowrow_reruns_symbolic_with_width1_nodes(name):
+    """rowrow must re-run symbolic with supernodes disabled: every plan node
+    is a single row, regardless of what the default symbolic found."""
+    Ac, _, _, _ = scenario_system(name, n=24, seed=2)
+    an = analyze(Ac, HyluOptions(force_mode="rowrow"))
+    assert an.sym.n_nodes == Ac.n
+    assert all(nd.nr == 1 for nd in an.plan.nodes)
+    # and a non-rowrow analysis of the same matrix may merge rows
+    an_h = analyze(Ac, HyluOptions(force_mode="supernodal"))
+    assert an_h.sym.n_nodes <= Ac.n
+
+
+def test_select_kernel_consistent_with_analysis():
+    """Calling select_kernel directly on the preprocessed pattern gives the
+    same decision analyze() recorded."""
+    Ac, _, _, _ = scenario_system("denseish", n=40, seed=0)
+    an = analyze(Ac)
+    # rebuild the symmetric permuted pattern exactly as analyze() does
+    match = max_weight_matching(Ac)
+    tracker = CSR(Ac.n, Ac.indptr.copy(), Ac.indices.copy(),
+                  np.arange(Ac.nnz, dtype=np.float64))
+    b2 = tracker.permute(np.arange(Ac.n), match.col_of_row.copy())
+    pat2 = CSR(Ac.n, b2.indptr, b2.indices, np.ones(Ac.nnz)).sym_pattern()
+    pat_m = pat2.permute(an.p, an.p)
+    choice, sym = select_kernel(pat_m)
+    assert choice.mode == an.choice.mode
+    assert choice.stats == an.choice.stats
+
+
+# --------------------------------------------------------------------------
+# batched matvec corner branches (host reference + device path)
+# --------------------------------------------------------------------------
+def test_batched_matvec_empty_rows_and_dtype():
+    indptr, indices = empty_row_pattern(n=9, seed=0)
+    nnz = len(indices)
+    rng = np.random.default_rng(0)
+    for dtype in (np.float64, np.float32):
+        vals = rng.normal(size=(2, nnz)).astype(dtype)
+        x = rng.normal(size=(2, 9)).astype(dtype)
+        out = _batched_matvec((indptr, indices), vals, x)
+        assert out.dtype == dtype, "empty-row fallback must preserve dtype"
+        # dense oracle
+        for k in range(2):
+            dense = np.zeros((9, 9), dtype=dtype)
+            for i in range(9):
+                dense[i, indices[indptr[i]:indptr[i + 1]]] = \
+                    vals[k, indptr[i]:indptr[i + 1]]
+            assert np.allclose(out[k], dense @ x[k], atol=1e-5)
+        # empty rows produce exact zeros
+        empty_rows = np.where(np.diff(indptr) == 0)[0]
+        assert len(empty_rows) > 0
+        assert np.all(out[:, empty_rows] == 0.0)
+
+
+def test_device_matvec_matches_host_reference():
+    import jax.numpy as jnp
+    from repro.core.jax_engine import make_csr_matvec_batched
+
+    indptr, indices = empty_row_pattern(n=9, seed=1)
+    nnz = len(indices)
+    rng = np.random.default_rng(1)
+    vals = rng.normal(size=(3, nnz))
+    x = rng.normal(size=(3, 9))
+    mv = make_csr_matvec_batched(indptr, indices)
+    out_dev = np.asarray(mv(jnp.asarray(vals), jnp.asarray(x)))
+    out_host = _batched_matvec((indptr, indices), vals, x)
+    assert np.abs(out_dev - out_host).max() < 1e-12
+    # multi-RHS device path
+    xm = rng.normal(size=(3, 9, 4))
+    out_m = np.asarray(mv(jnp.asarray(vals), jnp.asarray(xm)))
+    for j in range(4):
+        assert np.abs(out_m[:, :, j]
+                      - _batched_matvec((indptr, indices), vals,
+                                        xm[:, :, j])).max() < 1e-12

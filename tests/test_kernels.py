@@ -44,6 +44,36 @@ def test_trisolve_batched(kb, nr, k, dtype):
                                rtol=tol)
 
 
+@pytest.mark.parametrize("kb,k,m", [(1, 5, 1), (4, 13, 3), (3, 8, 6),
+                                    (2, 2, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float64, jnp.float32])
+def test_trisolve_left_solves(kb, k, m, dtype):
+    """The engine's block-substitution left-solves (U w = b and unit-L
+    w = b) expressed on the right-solve Pallas kernel via transpose/flip,
+    vs direct dense solves."""
+    from repro.kernels.trisolve import ops
+    blk = np.stack([np.asarray(_tri(k, jnp.float64))
+                    + np.tril(RNG.normal(size=(k, k)), -1)
+                    for _ in range(kb)])
+    b = RNG.normal(size=(kb, k, m))
+    blk_j = jnp.asarray(blk, dtype)
+    b_j = jnp.asarray(b, dtype)
+    tol = 1e-10 if dtype == jnp.float64 else 1e-3
+    w_u = np.asarray(ops.trsm_left_upper_batched(blk_j, b_j))
+    w_l = np.asarray(ops.trsm_left_unit_lower_batched(blk_j, b_j))
+    wr_u = np.asarray(ops.trsm_left_upper_ref_batched(blk_j, b_j))
+    wr_l = np.asarray(ops.trsm_left_unit_lower_ref_batched(blk_j, b_j))
+    for i in range(kb):
+        u = np.triu(blk[i])
+        l = np.tril(blk[i], -1) + np.eye(k)
+        np.testing.assert_allclose(w_u[i], np.linalg.solve(u, b[i]),
+                                   atol=tol, rtol=tol)
+        np.testing.assert_allclose(w_l[i], np.linalg.solve(l, b[i]),
+                                   atol=tol, rtol=tol)
+    np.testing.assert_allclose(w_u, wr_u, atol=tol, rtol=tol)
+    np.testing.assert_allclose(w_l, wr_l, atol=tol, rtol=tol)
+
+
 SUPSUP_SHAPES = [(5, 3, 7), (16, 8, 40), (33, 13, 5), (2, 1, 3), (8, 8, 128)]
 
 

@@ -1,0 +1,51 @@
+"""The float64 engine must refuse to build when jax x64 is disabled
+(silent degradation to float32 would limp through refinement at ~1e-6
+residuals).  Run by CI twice: in the x64 job (toggling the flag off
+in-process) and in the float32-only job where x64 is off from the start."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import HyluOptions, analyze
+from repro.core.api import jax_repeated_engine
+
+from tests.helpers import random_system
+
+
+def _analysis():
+    Ac, _, _ = random_system(24, 0.12, 41)
+    return analyze(Ac, HyluOptions(engine="jax"))
+
+
+def test_float64_engine_requires_x64():
+    an = _analysis()
+    prev = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", False)
+    try:
+        with pytest.raises(RuntimeError, match="x64 is disabled"):
+            jax_repeated_engine(an)
+    finally:
+        jax.config.update("jax_enable_x64", prev)
+
+
+def test_float32_engine_builds_without_x64():
+    """Requesting float32 explicitly is the sanctioned no-x64 path; the
+    engine must build and factor (to float32 accuracy) without the guard
+    firing."""
+    an = _analysis()
+    prev = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", False)
+    try:
+        eng = jax_repeated_engine(an, dtype=jnp.float32)
+        assert eng.dtype == jnp.float32
+    finally:
+        jax.config.update("jax_enable_x64", prev)
+
+
+def test_x64_engine_builds_when_enabled():
+    if not jax.config.jax_enable_x64:
+        pytest.skip("float32-only job: x64 disabled by the environment")
+    an = _analysis()
+    eng = jax_repeated_engine(an)
+    assert np.dtype(eng.dtype) == np.float64

@@ -1,0 +1,30 @@
+"""Persistent JAX compilation cache for benchmark / CI runs.
+
+Compilation is the dominant one-time cost of the repeated-solve engine;
+enabling ``jax_compilation_cache_dir`` means repeat bench and CI runs on
+an unchanged program skip it entirely.  Honest *cold* compile numbers
+(the ones recorded in BENCH_repeated.json) are taken by pointing the
+cache at a fresh directory or disabling it with ``--jax-cache ''``.
+"""
+from __future__ import annotations
+
+import os
+
+
+def enable_jax_compilation_cache(path: str | None = None):
+    """Enable the persistent compilation cache; returns the directory used
+    (or None when disabled with an empty path).
+
+    Resolution order: explicit ``path`` → $JAX_COMPILATION_CACHE_DIR →
+    ``.jax_cache`` in the working directory."""
+    import jax
+
+    cache_dir = path if path is not None else os.environ.get(
+        "JAX_COMPILATION_CACHE_DIR", ".jax_cache")
+    if not cache_dir:
+        return None
+    jax.config.update("jax_compilation_cache_dir", cache_dir)
+    # cache even fast compiles: the bench re-runs hundreds of small programs
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.1)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", 0)
+    return cache_dir

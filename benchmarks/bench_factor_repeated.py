@@ -14,13 +14,21 @@ XLA program, `solve_batched`) against the pre-fusion host-loop baseline
 (`api._solve_batched_hostloop`: one host round-trip per refinement
 iteration).
 
-Compile time is reported separately: it is part of the one-time analysis
-cost, amortized over the thousands of steps of a transient run.
+Compile time is reported first-class: compile_scalar_s / compile_batched_s
+per matrix plus their geomeans in the summary, and a compile-vs-run table
+(also written next to the JSON) — the level-bucketed factor trace lives or
+dies by this number.  ``--large`` adds the circuit_2000-scale matrices
+that only compile at all with the bucketed trace; ``--jax-cache DIR``
+points the persistent JAX compilation cache somewhere (default
+``$JAX_COMPILATION_CACHE_DIR`` or ``.jax_cache``; pass '' to disable —
+recorded compile numbers are only *cold* numbers with a fresh/disabled
+cache).
 
 Writes BENCH_repeated.json (per-matrix timings + geomean speedups over
 looped-ref) so successive PRs have a perf trajectory.
 
-    PYTHONPATH=src python -m benchmarks.bench_factor_repeated [--k 32] [--quick]
+    PYTHONPATH=src python -m benchmarks.bench_factor_repeated \
+        [--k 32] [--quick] [--large] [--jax-cache DIR]
 """
 from __future__ import annotations
 
@@ -111,21 +119,36 @@ def bench_matrix(name, Ac, k):
     rec["end2end_jax_batched_s"] = time.perf_counter() - t0
 
     # ---- solve phase: fused on-device refinement vs the host-loop baseline
-    # (device substitution + numpy residual matvec + Python refine loop) ----
-    reps = 5
+    # (device substitution + numpy residual matvec + Python refine loop).
+    # best-of-N timing: these are millisecond-scale calls on a shared
+    # machine, where a mean is dominated by scheduler noise ----------------
+    reps = 10
+
+    def _best(fn):
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn()
+            ts.append(time.perf_counter() - t0)
+        return min(ts)
+
     _solve_batched_hostloop(bst, bb)             # warm the scalar apply path
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        _solve_batched_hostloop(bst, bb)
-    rec["solve_hostloop_s"] = (time.perf_counter() - t0) / reps
-    solve_batched(bst, bb)                       # fused program is compiled
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        x, info = solve_batched(bst, bb)
-    rec["solve_fused_s"] = (time.perf_counter() - t0) / reps
+    rec["solve_hostloop_s"] = _best(lambda: _solve_batched_hostloop(bst, bb))
+    x, info = solve_batched(bst, bb)             # fused program is compiled
+    rec["solve_fused_s"] = _best(lambda: solve_batched(bst, bb))
     rec["solve_n_refine"] = int(info["n_refine"])
     rec["speedup_solve_fused"] = (rec["solve_hostloop_s"]
                                   / rec["solve_fused_s"])
+    # the fused on-device solve must not lose to the host loop even when
+    # refinement doesn't iterate (0.9: timing-jitter allowance).  Guarded
+    # on the core suite at production batch sizes only: below K≈16 the
+    # lax.while_loop's fixed ~0.3 ms overhead dominates sub-ms solves, and
+    # the --large matrices' multi-hundred-ms solves swing tens of percent
+    # with machine load (informational there).  Recorded per matrix and
+    # raised only after the whole suite is written out, so one noisy
+    # sample can't discard the run's results.
+    rec["solve_fused_ok"] = (k < 16 or Ac.n > 1000
+                             or rec["speedup_solve_fused"] >= 0.9)
 
     # refinement-engaged: tol=0 forces the loop to iterate until it stalls,
     # so the per-iteration host round-trip of the baseline is actually on
@@ -134,15 +157,11 @@ def bench_matrix(name, Ac, k):
     an.opts.refine_tol = 0.0
     try:
         _solve_batched_hostloop(bst, bb, refine=True)
-        t0 = time.perf_counter()
-        for _ in range(reps):
-            _, info_h = _solve_batched_hostloop(bst, bb, refine=True)
-        rec["solve_refined_hostloop_s"] = (time.perf_counter() - t0) / reps
-        solve_batched(bst, bb, refine=True)
-        t0 = time.perf_counter()
-        for _ in range(reps):
-            _, info_f = solve_batched(bst, bb, refine=True)
-        rec["solve_refined_fused_s"] = (time.perf_counter() - t0) / reps
+        rec["solve_refined_hostloop_s"] = _best(
+            lambda: _solve_batched_hostloop(bst, bb, refine=True))
+        _, info_f = solve_batched(bst, bb, refine=True)
+        rec["solve_refined_fused_s"] = _best(
+            lambda: solve_batched(bst, bb, refine=True))
         rec["solve_refined_n_iter"] = int(info_f["n_refine"])
         rec["speedup_solve_refined_fused"] = (
             rec["solve_refined_hostloop_s"] / rec["solve_refined_fused_s"])
@@ -157,25 +176,47 @@ def bench_matrix(name, Ac, k):
     return rec
 
 
-def suite(quick=False):
+def suite(quick=False, large=False):
     if quick:
         return [("circuit_150", CSR.from_scipy(matrices.circuit_like(150, 1)
                                                .tocsr()))]
-    return [
+    mats = [
         ("circuit_200", CSR.from_scipy(matrices.circuit_like(200, 1).tocsr())),
         ("fem2d_12", CSR.from_scipy(matrices.fem2d(12, 12, 4).tocsr())),
         ("unsym_150", CSR.from_scipy(matrices.unsym_random(150, 0.02, 8)
                                      .tocsr())),
     ]
+    if large:
+        mats += [(name, CSR.from_scipy(fn().tocsr()))
+                 for name, fn in matrices.large_suite()]
+    return mats
 
 
-def bench_repeated(k=32, quick=False, out_path="BENCH_repeated.json"):
+def compile_table(records) -> str:
+    """Compile-vs-run table: the bucketed trace's headline numbers."""
+    lines = [f"{'matrix':14s} {'n':>6s} {'compile_scalar':>15s} "
+             f"{'compile_batched':>16s} {'refac_batched':>14s} "
+             f"{'compile/run':>12s}"]
+    for name, r in records.items():
+        ratio = r["compile_batched_s"] / max(r["refac_jax_batched_s"], 1e-12)
+        lines.append(f"{name:14s} {r['n']:6d} {r['compile_scalar_s']:13.2f}s "
+                     f"{r['compile_batched_s']:14.2f}s "
+                     f"{r['refac_jax_batched_s']*1e3:12.1f}ms "
+                     f"{ratio:11.0f}x")
+    return "\n".join(lines)
+
+
+def bench_repeated(k=32, quick=False, large=False,
+                   out_path="BENCH_repeated.json", jax_cache=None,
+                   jax_cache_warm=False):
     records = {}
-    for name, Ac in suite(quick=quick):
+    for name, Ac in suite(quick=quick, large=large):
         t0 = time.time()
         records[name] = bench_matrix(name, Ac, k)
         r = records[name]
         print(f"[repeated] {name:14s} n={r['n']:5d} mode={r['mode']:8s} "
+              f"compile={r['compile_scalar_s']:5.1f}/"
+              f"{r['compile_batched_s']:5.1f}s "
               f"refac ref={r['refac_ref_loop_s']*1e3:7.1f}ms "
               f"jit={r['refac_jax_jit_s']*1e3:7.1f}ms "
               f"batched={r['refac_jax_batched_s']*1e3:7.1f}ms "
@@ -199,13 +240,35 @@ def bench_repeated(k=32, quick=False, out_path="BENCH_repeated.json"):
             [r["speedup_solve_fused"] for r in records.values()]),
         "solve_refined_fused": _geomean(
             [r["speedup_solve_refined_fused"] for r in records.values()]),
+        # absolute one-time costs (seconds), tracked so trace-size blowups
+        # show up in the perf trajectory as hard numbers
+        "compile_scalar_s": _geomean(
+            [r["compile_scalar_s"] for r in records.values()]),
+        "compile_batched_s": _geomean(
+            [r["compile_batched_s"] for r in records.values()]),
     }
-    out = dict(k=k, matrices=records, geomean_speedup_over_ref_loop=summary)
+    # label whether compile numbers could have hit a warm persistent cache
+    # — only cold (jax_cache disabled/fresh) numbers are trajectory-grade
+    out = dict(k=k, jax_compilation_cache=jax_cache or None,
+               jax_cache_warm=bool(jax_cache_warm),
+               matrices=records, geomean_speedup_over_ref_loop=summary)
     with open(out_path, "w") as f:
         json.dump(out, f, indent=1)
+    table = compile_table(records)
+    table_path = out_path.rsplit(".", 1)[0] + "_compile_table.txt"
+    with open(table_path, "w") as f:
+        f.write(table + "\n")
+    print("\ncompile-vs-run (one-time cost amortized over the sequence):")
+    print(table)
     print(f"\ngeomean speedups over looped-ref (K={k}): "
-          + "  ".join(f"{n}={v:.2f}x" for n, v in summary.items()))
-    print(f"results → {out_path}")
+          + "  ".join(f"{n}={v:.2f}{'' if n.endswith('_s') else 'x'}"
+                      for n, v in summary.items()))
+    print(f"results → {out_path}  compile table → {table_path}")
+    bad = [name for name, r in records.items() if not r["solve_fused_ok"]]
+    if bad:
+        raise AssertionError(
+            "no-refine fused solve slower than host loop on: "
+            + ", ".join(bad) + " (results were still written)")
     return out
 
 
@@ -213,9 +276,26 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--k", type=int, default=32)
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--large", action="store_true",
+                    help="add the circuit_2000-scale matrices")
     ap.add_argument("--out", default="BENCH_repeated.json")
+    ap.add_argument("--jax-cache", default=None, metavar="DIR",
+                    help="persistent JAX compilation cache dir "
+                         "('' disables; default $JAX_COMPILATION_CACHE_DIR "
+                         "or .jax_cache)")
     args = ap.parse_args(argv)
-    bench_repeated(k=args.k, quick=args.quick, out_path=args.out)
+    import os
+
+    from ._jax_cache import enable_jax_compilation_cache
+    cache = enable_jax_compilation_cache(args.jax_cache)
+    # pre-run state: a populated cache dir means the recorded compile
+    # numbers may be warm-cache hits, not trajectory-grade cold compiles
+    warm = bool(cache) and os.path.isdir(cache) and bool(os.listdir(cache))
+    if cache:
+        print(f"[jax] persistent compilation cache at {cache} "
+              f"({'warm' if warm else 'cold'})")
+    bench_repeated(k=args.k, quick=args.quick, large=args.large,
+                   out_path=args.out, jax_cache=cache, jax_cache_warm=warm)
     return 0
 
 

@@ -182,6 +182,18 @@ def suite(scale=1.0):
     return mats
 
 
+def large_suite():
+    """circuit_2000-scale generators (gated behind ``--large`` in the
+    benchmarks): an order of magnitude past the historical repeated-solve
+    suite, feasible only with the level-bucketed factor trace — the
+    unrolled O(nodes+edges) trace does not compile at this size in any
+    reasonable time."""
+    return [
+        ("circuit_2000", lambda: circuit_like(2000, 3)),
+        ("banded_2000", lambda: banded(2000, 6, 5)),
+    ]
+
+
 def load(name_fn):
     name, fn = name_fn
     a = fn().tocsr()

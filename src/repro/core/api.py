@@ -42,6 +42,8 @@ class HyluOptions:
     bulk_min_width: int = 8
     engine: str = "ref"                    # ref | jax — default numeric engine
     use_pallas: bool = False               # route jax panel updates via Pallas
+    factor_schedule: str = "bucketed"      # bucketed (O(levels) trace) |
+                                           # unrolled (O(nodes+edges) oracle)
 
 
 @dataclasses.dataclass
@@ -151,12 +153,14 @@ def _m_values(an: Analysis, a: CSR) -> CSR:
     return CSR(a.n, an.m_pattern[0], an.m_pattern[1], data)
 
 
-def jax_repeated_engine(an: Analysis, dtype=None, use_pallas: bool | None = None):
+def jax_repeated_engine(an: Analysis, dtype=None, use_pallas: bool | None = None,
+                        schedule: str | None = None):
     """The pre-compiled repeated-solve engine for this analysis.
 
-    Built lazily and cached on the analysis (keyed by dtype/pallas), so
-    every subsequent factor/refactor/solve through ``engine="jax"`` — and
-    every batched call — is one already-compiled XLA program."""
+    Built lazily and cached on the analysis (keyed by dtype/pallas/factor
+    schedule), so every subsequent factor/refactor/solve through
+    ``engine="jax"`` — and every batched call — is one already-compiled
+    XLA program."""
     import jax.numpy as jnp
 
     from .jax_engine import RepeatedSolveEngine
@@ -164,7 +168,8 @@ def jax_repeated_engine(an: Analysis, dtype=None, use_pallas: bool | None = None
 
     dtype = jnp.float64 if dtype is None else dtype
     use_pallas = an.opts.use_pallas if use_pallas is None else use_pallas
-    key = (np.dtype(dtype).name, bool(use_pallas))
+    schedule = an.opts.factor_schedule if schedule is None else schedule
+    key = (np.dtype(dtype).name, bool(use_pallas), schedule)
     eng = an.jit_cache.get(key)
     if eng is None:
         ss = build_solve_structure(an.plan,
@@ -173,7 +178,8 @@ def jax_repeated_engine(an: Analysis, dtype=None, use_pallas: bool | None = None
             an.plan, ss, src_map=an.src_map, scale_map=an.scale_map,
             p=an.p, q=an.q, row_scale=an.match.row_scale,
             col_scale=an.match.col_scale, perturb_eps=an.opts.perturb_eps,
-            dtype=dtype, use_pallas=use_pallas)
+            dtype=dtype, use_pallas=use_pallas, schedule=schedule,
+            bulk_min_width=an.opts.bulk_min_width)
         an.jit_cache[key] = eng
     return eng
 

@@ -94,10 +94,199 @@ def _panel_lu(panel, nr, lsize, eps_p, use_pallas=False, interpret=True):
     return panel, perm, nper
 
 
+def _node_lu_writeback(vals, inode, nper, nd, panel, off, eps_p,
+                       use_pallas, interpret):
+    """Internal LU of one node's (already edge-updated) panel + pivot
+    bookkeeping + write-back.  Shared by the fully unrolled trace and the
+    bucketed trace's narrow-level sequential nodes (whose edges were
+    applied eagerly, so they need exactly this edge-free remainder);
+    ``vals``/``inode`` may carry extra sentinel slots past the plan's
+    sizes — all offsets touched here are real."""
+    nr = nd.nr
+    panel, lperm, np_ = _panel_lu(panel, nr, nd.lsize, eps_p,
+                                  use_pallas=use_pallas, interpret=interpret)
+    nper = nper + np_
+    if nr > 1:
+        seg = jax.lax.dynamic_slice(inode, (nd.r0,), (nr,))
+        inode = jax.lax.dynamic_update_slice(inode, seg[lperm], (nd.r0,))
+    vals = jax.lax.dynamic_update_slice(vals, panel.reshape(-1), (off,))
+    return vals, inode, nper
+
+
+def _node_step_unrolled(vals, inode, nper, nd, nodes, offs, eps_p,
+                        use_pallas, interpret):
+    """One node's left-looking edge loop + internal LU (the per-node
+    sequential kernel of the unrolled trace)."""
+    off = int(offs[nd.nid])
+    nr, w = nd.nr, nd.width
+    panel = jax.lax.dynamic_slice(vals, (off,), (nr * w,)).reshape(nr, w)
+    for e in nd.edges:
+        snd = nodes[e.src]
+        soff = int(offs[snd.nid])
+        sp = jax.lax.dynamic_slice(
+            vals, (soff,), (snd.nr * snd.width,)).reshape(snd.nr, snd.width)
+        src = sp[:, snd.lsize:]
+        k = snd.nr
+        cm = e.col_map
+        x = panel[:, cm]
+        if k == 1:
+            lts = x[:, :1] / src[0, 0]          # row-row / sup-row
+            xr = x[:, 1:] - lts * src[:, 1:]
+        else:
+            if use_pallas and nr > 1:
+                from repro.kernels.supsup import ops as supsup_ops
+                lts, xr = supsup_ops.supsup_update(
+                    x, src, k, interpret=interpret)
+            else:
+                lts = _trsm_upper_jax(src[:, :k], x[:, :k])
+                xr = x[:, k:] - lts @ src[:, k:]
+        panel = panel.at[:, cm].set(jnp.concatenate([lts, xr], axis=1))
+    return _node_lu_writeback(vals, inode, nper, nd, panel, off, eps_p,
+                              use_pallas, interpret)
+
+
+def _panel_lu_bucketed(panels, wu, eps_p, use_pallas=False, interpret=True):
+    """Dense LU with in-block partial pivoting on a (B, nr, wt) bucket of
+    column-reordered panels: elimination runs over the static window
+    [0, wu) (block + U suffix); trailing columns (the L prefix) only get
+    row-permuted.  Padded block diagonals are identity so padded pivot
+    steps are exact no-ops.  Returns (panels, perm (B, nr), nper (B,))."""
+    if use_pallas:
+        from repro.kernels.panel import ops as panel_ops
+        return panel_ops.panel_lu_batched(panels, wu, eps_p,
+                                          interpret=interpret)
+    from repro.kernels.panel.ref import panel_lu_bucketed_ref
+    return panel_lu_bucketed_ref(panels, wu, eps_p)
+
+
+def _make_factor_fn_bucketed(plan: FactorPlan, perturb_eps, dtype,
+                             use_pallas, interpret, bulk_min_width=8):
+    """Level-bucketed trace: O(levels × shape-buckets) XLA ops instead of
+    O(nodes + edges).  Every level's edge applications run as batched
+    per-bucket gathers + TRSM / GEMM + scatters; internal LUs are bucketed
+    on wide levels (the paper's bulk mode, on the factor path) and
+    per-node on narrow levels (sequential mode)."""
+    from .structure import get_bucket_schedule
+
+    sched = get_bucket_schedule(plan, bulk_min_width=bulk_min_width)
+    nodes = plan.nodes
+    offs = plan.panel_offset
+
+    def factor_fn(b_data: jax.Array) -> JaxFactors:
+        b_data = b_data.astype(dtype)
+        amax = jnp.max(jnp.abs(b_data))
+        eps_p = perturb_eps * amax
+        vals = jnp.zeros((sched.n_ext,), dtype=dtype)
+        vals = vals.at[plan.a_scatter].set(b_data)
+        # identity-pivot sentinel: a huge value rather than 1.0, so padded
+        # diagonals can never test as "small" even under absurd
+        # perturb_eps settings (|1e30| < eps_p is false for any sane eps;
+        # padded TRSM/divide still yields exact zeros: 0 / 1e30 == 0)
+        vals = vals.at[sched.one_slot].set(jnp.asarray(1e30, dtype))
+        inode = jnp.arange(plan.n + 1, dtype=jnp.int32)
+        nper = jnp.int32(0)
+
+        for step in sched.steps:
+            # ---- internal factorization of this level's nodes ------------
+            if step.diag is not None:           # width-1: perturb diagonals
+                dsl = jnp.asarray(step.diag.slots)
+                d = vals[dsl]
+                small = jnp.abs(d) < eps_p
+                d = jnp.where(small, jnp.where(d >= 0, eps_p, -eps_p), d)
+                vals = vals.at[dsl].set(d)
+                nper = nper + jnp.sum(small).astype(jnp.int32)
+            for pb in step.panels:              # wider: bucketed dense LU
+                P = vals[jnp.asarray(pb.gather)]
+                P, perm, npb = _panel_lu_bucketed(
+                    P, pb.wu, eps_p, use_pallas=use_pallas,
+                    interpret=interpret)
+                vals = vals.at[jnp.asarray(pb.scatter)].set(P)
+                nper = nper + jnp.sum(npb).astype(jnp.int32)
+                rows = jnp.asarray(pb.rows)
+                seg = inode[rows]
+                inode = inode.at[rows].set(
+                    jnp.take_along_axis(seg, perm, axis=1))
+            for t in step.seq:                  # narrow level: per-node LU
+                nd = nodes[int(t)]
+                off = int(offs[nd.nid])
+                panel = jax.lax.dynamic_slice(
+                    vals, (off,), (nd.nr * nd.width,)).reshape(nd.nr,
+                                                               nd.width)
+                vals, inode, nper = _node_lu_writeback(
+                    vals, inode, nper, nd, panel, off, eps_p,
+                    use_pallas, interpret)
+            # ---- eager application of this level's outgoing edges --------
+            for eb in step.edges:
+                S = vals[jnp.asarray(eb.src_idx)]     # (E, k, k+m)
+                U, Us = S[:, :, :eb.k], S[:, :, eb.k:]
+                X = vals[jnp.asarray(eb.x_idx)]       # (E, nr, k)
+                if eb.k == 1:                         # row-row / sup-row
+                    lts = X / U[:, 0, 0][:, None, None]
+                    delta = lts * Us                  # (E, nr, 1)·(E, 1, m)
+                elif use_pallas:                      # sup-sup on Pallas
+                    from repro.kernels.supsup import ops as supsup_ops
+                    from repro.kernels.trisolve import ops as trisolve_ops
+                    lts = trisolve_ops.trsm_batched(U, X, interpret=interpret)
+                    delta = supsup_ops.gemm_batched(lts, Us,
+                                                    interpret=interpret)
+                else:                                 # sup-sup via XLA
+                    lts = jax.lax.linalg.triangular_solve(
+                        U, X, left_side=False, lower=False)
+                    delta = lts @ Us
+                # one combined scatter: multiplier write-back expressed as
+                # an add of (lts - X), trailing update as -delta
+                ne = lts.shape[0]
+                w_vals = jnp.concatenate([(lts - X).reshape(ne, -1),
+                                          (-delta).reshape(ne, -1)], axis=1)
+                vals = vals.at[jnp.asarray(eb.write_idx)].add(w_vals)
+
+        # ---- scanned width-1 suffix: one traced body per chunk -----------
+        def scan_body(carry, xs):
+            vals, nper = carry
+            dsl, x_i, s_i, w_i = xs
+            d = vals[dsl]
+            small = jnp.abs(d) < eps_p          # pads read the huge sentinel
+            d = jnp.where(small, jnp.where(d >= 0, eps_p, -eps_p), d)
+            vals = vals.at[dsl].set(d)
+            nper = nper + jnp.sum(small).astype(jnp.int32)
+            S = vals[s_i]                       # (E, 1+M)
+            X = vals[x_i]                       # (E,)
+            lts = X / S[:, 0]
+            upd = jnp.concatenate([(lts - X)[:, None],
+                                   -lts[:, None] * S[:, 1:]], axis=1)
+            vals = vals.at[w_i].add(upd)
+            return (vals, nper), None
+
+        for ch in sched.scan_chunks:
+            (vals, nper), _ = jax.lax.scan(
+                scan_body, (vals, nper),
+                (jnp.asarray(ch.dsl), jnp.asarray(ch.x_idx),
+                 jnp.asarray(ch.src_idx), jnp.asarray(ch.write_idx)))
+
+        return JaxFactors(vals=vals[:plan.total_slots],
+                          inode_perm=inode[:plan.n], n_perturb=nper)
+
+    return factor_fn
+
+
 def make_factor_fn(plan: FactorPlan, perturb_eps: float = 1e-8,
                    dtype=jnp.float64, use_pallas: bool = False,
-                   interpret: bool = True):
-    """Emit the jittable numeric factorization for this plan."""
+                   interpret: bool = True, schedule: str = "bucketed",
+                   bulk_min_width: int = 8):
+    """Emit the jittable numeric factorization for this plan.
+
+    schedule="bucketed" (default) traces the level-bucketed program —
+    O(levels × shape-buckets) ops, the only way compile time stays sane
+    past toy sizes; "unrolled" keeps the historical per-node/per-edge
+    trace (parity oracle for the bucketed path, and micro-best for very
+    small plans)."""
+    if schedule == "bucketed":
+        return _make_factor_fn_bucketed(plan, perturb_eps, dtype,
+                                        use_pallas, interpret,
+                                        bulk_min_width=bulk_min_width)
+    if schedule != "unrolled":
+        raise ValueError(f"unknown factor schedule {schedule!r}: "
+                         "expected 'bucketed' or 'unrolled'")
     offs = plan.panel_offset
     nodes = plan.nodes
 
@@ -109,40 +298,10 @@ def make_factor_fn(plan: FactorPlan, perturb_eps: float = 1e-8,
         vals = vals.at[plan.a_scatter].set(b_data)
         inode = jnp.arange(plan.n, dtype=jnp.int32)
         nper = jnp.int32(0)
-
         for nd in nodes:
-            off = int(offs[nd.nid])
-            nr, w = nd.nr, nd.width
-            panel = jax.lax.dynamic_slice(vals, (off,), (nr * w,)).reshape(nr, w)
-            for e in nd.edges:
-                snd = nodes[e.src]
-                soff = int(offs[snd.nid])
-                sp = jax.lax.dynamic_slice(
-                    vals, (soff,), (snd.nr * snd.width,)).reshape(snd.nr, snd.width)
-                src = sp[:, snd.lsize:]
-                k = snd.nr
-                cm = e.col_map
-                x = panel[:, cm]
-                if k == 1:
-                    lts = x[:, :1] / src[0, 0]          # row-row / sup-row
-                    xr = x[:, 1:] - lts * src[:, 1:]
-                else:
-                    if use_pallas and nr > 1:
-                        from repro.kernels.supsup import ops as supsup_ops
-                        lts, xr = supsup_ops.supsup_update(
-                            x, src, k, interpret=interpret)
-                    else:
-                        lts = _trsm_upper_jax(src[:, :k], x[:, :k])
-                        xr = x[:, k:] - lts @ src[:, k:]
-                panel = panel.at[:, cm].set(jnp.concatenate([lts, xr], axis=1))
-            panel, lperm, np_ = _panel_lu(panel, nr, nd.lsize, eps_p,
-                                          use_pallas=use_pallas,
-                                          interpret=interpret)
-            nper = nper + np_
-            if nr > 1:
-                seg = jax.lax.dynamic_slice(inode, (nd.r0,), (nr,))
-                inode = jax.lax.dynamic_update_slice(inode, seg[lperm], (nd.r0,))
-            vals = jax.lax.dynamic_update_slice(vals, panel.reshape(-1), (off,))
+            vals, inode, nper = _node_step_unrolled(
+                vals, inode, nper, nd, nodes, offs, eps_p,
+                use_pallas, interpret)
         return JaxFactors(vals=vals, inode_perm=inode, n_perturb=nper)
 
     return factor_fn
@@ -151,26 +310,97 @@ def make_factor_fn(plan: FactorPlan, perturb_eps: float = 1e-8,
 # --------------------------------------------------------------------------
 # level-scheduled triangular solves in JAX (static SolveStructure schedules)
 # --------------------------------------------------------------------------
+def _tri_scan_chunks(sched, n, bulk_min_width: int = 8):
+    """Chunked scan schedule for a TriSched's narrow tail levels.
+
+    The trace of a level-unrolled substitution is O(levels); the long
+    narrow tail of a sparse triangular schedule makes that expensive to
+    compile for zero runtime benefit.  This packs maximal runs of
+    consecutive narrow levels — padded to shared (rows, deps) shapes with
+    at most 4x waste per dim — into per-chunk index arrays a single
+    ``lax.scan`` body consumes.  Padding is maskless: padded rows/cols
+    point at the extra row n of the padded unknown vector (which provably
+    stays 0), padded slots at slot 0 (multiplied by that 0).
+
+    Returns (n_head_levels, [(rows, rowmap, cols, slot), ...]); cached on
+    the TriSched keyed by ``bulk_min_width``."""
+    cache = getattr(sched, "_scan_chunks", None)
+    if cache is None:
+        cache = {}
+        sched._scan_chunks = cache
+    cached = cache.get(bulk_min_width)
+    if cached is not None:
+        return cached
+    from .structure import segment_levels
+
+    levels = list(zip(sched.rows, sched.cols, sched.slot, sched.seg))
+    s = len(levels)
+    while s > 0 and len(levels[s - 1][0]) < bulk_min_width:
+        s -= 1
+
+    groups = [levels[s + i:s + j]
+              for i, j in segment_levels(
+                  [(len(l[0]), len(l[1])) for l in levels[s:]])]
+
+    chunks = []
+    for group in groups:
+        rmax = max(max(len(g[0]) for g in group), 1)
+        dmax = max(max(len(g[1]) for g in group), 1)
+        nl = len(group)
+        rows_a = np.full((nl, rmax), n, np.int64)
+        rowmap_a = np.full((nl, dmax), n, np.int64)
+        cols_a = np.full((nl, dmax), n, np.int64)
+        slot_a = np.zeros((nl, dmax), np.int64)
+        for l, (r, c, sl, sg) in enumerate(group):
+            rows_a[l, :len(r)] = r
+            if len(sg):
+                rowmap_a[l, :len(sg)] = r[sg]
+            cols_a[l, :len(c)] = c
+            slot_a[l, :len(sl)] = sl
+        chunks.append((rows_a, rowmap_a, cols_a, slot_a))
+    cached = (s, chunks)
+    cache[bulk_min_width] = cached
+    return cached
+
+
 def _tri_solve(sched, vals, rhs, diag_slots=None, transpose_diag=False):
-    """One triangular substitution following a TriSched. Each level is one
-    vectorized gather + segment-sum (bulk mode); narrow tail levels are tiny
-    sequential ops — the paper's bulk-sequential dual mode, unrolled."""
+    """One triangular substitution following a TriSched.  Each bulk level
+    is one vectorized gather + scatter-add; the narrow tail levels run as
+    chunked ``lax.scan``s (see ``_tri_scan_chunks``) — the paper's
+    bulk-sequential dual mode with an O(bulk levels + chunks) trace.  The
+    per-row reduction and the row update fold into a single
+    duplicate-accumulating scatter (rows[seg] maps every dependency
+    straight to its target row) — scatter op count is what XLA compile
+    time scales with."""
+    n = rhs.shape[0]
+    n_head, chunks = _tri_scan_chunks(sched, n)
     w = rhs
-    for rows, cols, slot, seg in zip(sched.rows, sched.cols, sched.slot,
-                                     sched.seg):
+    for rows, cols, slot, seg in zip(sched.rows[:n_head],
+                                     sched.cols[:n_head],
+                                     sched.slot[:n_head],
+                                     sched.seg[:n_head]):
         if diag_slots is None:          # unit-diagonal (L or Lᵀ)
             if len(cols):
-                acc = jax.ops.segment_sum(vals[slot] * w[cols], seg,
-                                          num_segments=len(rows))
-                w = w.at[rows].add(-acc)
-        else:
-            d = vals[diag_slots[rows]]
+                w = w.at[rows[seg]].add(-(vals[slot] * w[cols]))
+        else:                           # non-unit diagonal U
             if len(cols):
-                acc = jax.ops.segment_sum(vals[slot] * w[cols], seg,
-                                          num_segments=len(rows))
-                w = w.at[rows].set((w[rows] - acc) / d)
-            else:
-                w = w.at[rows].set(w[rows] / d)
+                w = w.at[rows[seg]].add(-(vals[slot] * w[cols]))
+            w = w.at[rows].divide(vals[diag_slots[rows]])
+    if chunks:
+        if diag_slots is not None:
+            dpad = jnp.asarray(np.concatenate([diag_slots, diag_slots[:1]]))
+        w = jnp.concatenate([w, jnp.zeros((1,), w.dtype)])
+
+        def body(w, xs):
+            rows_l, rowmap_l, cols_l, slot_l = xs
+            w = w.at[rowmap_l].add(-(vals[slot_l] * w[cols_l]))
+            if diag_slots is not None:
+                w = w.at[rows_l].divide(vals[dpad[rows_l]])
+            return w, None
+
+        for ch in chunks:
+            w, _ = jax.lax.scan(body, w, tuple(jnp.asarray(a) for a in ch))
+        w = w[:n]
     return w
 
 
@@ -199,31 +429,56 @@ def _tri_solve_batched(sched, vals, rhs, diag_slots=None):
     """Batched level-scheduled substitution: vals (K, slots), rhs (K, n) or
     (K, n, m) for multi-RHS.
 
-    Same schedule as ``_tri_solve`` but each level's gather + segment-sum is
-    vectorized over the batch (and any trailing RHS dim) as well — one
-    product and one segment-sum per level for the whole batch, instead of
-    K programs."""
+    Same schedule as ``_tri_solve`` — bulk levels unrolled (one product and
+    one duplicate-index scatter-add per level), narrow tail levels as
+    chunked ``lax.scan``s — with every op vectorized over the batch (and
+    any trailing RHS dim) as well.  Everything stays in the batch-first
+    layout: the reduction is a scatter-add on axis 1, not a segment-sum,
+    so no per-level ``moveaxis`` round-trips materialize (K, nnz)
+    transposes."""
+    n = rhs.shape[1]
+    n_head, chunks = _tri_scan_chunks(sched, n)
     w = rhs
     multi = w.ndim == 3
-    for rows, cols, slot, seg in zip(sched.rows, sched.cols, sched.slot,
-                                     sched.seg):
+    for rows, cols, slot, seg in zip(sched.rows[:n_head],
+                                     sched.cols[:n_head],
+                                     sched.slot[:n_head],
+                                     sched.seg[:n_head]):
         if len(cols):
             v = vals[:, slot]
             prod = v[:, :, None] * w[:, cols] if multi else v * w[:, cols]
-            acc = jnp.moveaxis(
-                jax.ops.segment_sum(jnp.moveaxis(prod, 1, 0), seg,
-                                    num_segments=len(rows)), 0, 1)
         if diag_slots is None:          # unit-diagonal L
-            if len(cols):
-                w = w.at[:, rows].add(-acc)
-        else:
+            if len(cols):               # one fused scatter: deps → rows
+                w = w.at[:, rows[seg]].add(-prod)
+        else:                           # non-unit diagonal U
             d = vals[:, diag_slots[rows]]
             if multi:
                 d = d[:, :, None]
             if len(cols):
-                w = w.at[:, rows].set((w[:, rows] - acc) / d)
-            else:
-                w = w.at[:, rows].set(w[:, rows] / d)
+                w = w.at[:, rows[seg]].add(-prod)
+            w = w.at[:, rows].divide(d)
+    if chunks:
+        if diag_slots is not None:
+            dpad = jnp.asarray(np.concatenate([diag_slots, diag_slots[:1]]))
+        w = jnp.concatenate(
+            [w, jnp.zeros(w.shape[:1] + (1,) + w.shape[2:], w.dtype)],
+            axis=1)
+
+        def body(w, xs):
+            rows_l, rowmap_l, cols_l, slot_l = xs
+            v = vals[:, slot_l]
+            prod = v[:, :, None] * w[:, cols_l] if multi else v * w[:, cols_l]
+            w = w.at[:, rowmap_l].add(-prod)
+            if diag_slots is not None:
+                d = vals[:, dpad[rows_l]]
+                if multi:
+                    d = d[:, :, None]
+                w = w.at[:, rows_l].divide(d)
+            return w, None
+
+        for ch in chunks:
+            w, _ = jax.lax.scan(body, w, tuple(jnp.asarray(a) for a in ch))
+        w = w[:, :n]
     return w
 
 
@@ -267,7 +522,7 @@ def make_batched_lu_solver(ss, dtype=jnp.float64, use_pallas: bool = False,
                            interpret: bool = True):
     """Batched variant of :func:`make_lu_solver` over (K, slots)/(K, n)
     (or (K, n, m) multi-RHS).  ``use_pallas=True`` swaps the level-scheduled
-    segment-sum substitution for the node-block schedule whose supernode
+    scatter-add substitution for the node-block schedule whose supernode
     diagonal blocks run on the Pallas TRSM kernel."""
     if use_pallas:
         def lu_solve_batched(vals, c):
@@ -288,10 +543,11 @@ def make_csr_matvec_batched(indptr, indices):
     compile-time constants: ``(A_k x_k)`` for K matrices sharing one
     sparsity pattern, x (K, n) or (K, n, m).
 
-    One gather + one segment-sum for the whole batch; empty rows fall out
-    of the segment-sum as exact zeros (no host fallback), and the batch
-    dtype is preserved.  This is the residual matvec of the fused
-    refinement loop — it keeps r = b - A x on device."""
+    One gather + one batch-first scatter-add for the whole batch (no
+    per-call transposes of the (K, nnz) product); empty rows stay exact
+    zeros (no host fallback), and the batch dtype is preserved.  This is
+    the residual matvec of the fused refinement loop — it keeps
+    r = b - A x on device."""
     indptr = np.asarray(indptr)
     indices = np.asarray(indices)
     n = len(indptr) - 1
@@ -301,11 +557,18 @@ def make_csr_matvec_batched(indptr, indices):
     def matvec(a_vals, x):
         prod = (a_vals[:, :, None] * x[:, idx] if x.ndim == 3
                 else a_vals * x[:, idx])
-        return jnp.moveaxis(
-            jax.ops.segment_sum(jnp.moveaxis(prod, 1, 0), seg,
-                                num_segments=n), 0, 1)
+        return jnp.zeros((x.shape[0], n) + x.shape[2:],
+                         prod.dtype).at[:, seg].add(prod)
 
     return matvec
+
+
+def _output_perm(p, q):
+    """The solve's two output scatters z[p]=w, y[q]=z composed into one
+    static gather index:  z[p]=w ⇒ z=w[p⁻¹];  y[q]=z ⇒ y=z[q⁻¹];  hence
+    y = w[p⁻¹[q⁻¹]].  Shared by the scalar and batched apply paths so the
+    permutation semantics cannot diverge."""
+    return jnp.asarray(np.argsort(p)[np.argsort(q)])
 
 
 def make_permuted_apply(lu_solve, n, p, q, row_scale, col_scale,
@@ -318,18 +581,18 @@ def make_permuted_apply(lu_solve, n, p, q, row_scale, col_scale,
 
     Single definition shared by the repeated-solve engine and the
     differentiable solver (autodiff) so the permutation/scaling semantics
-    cannot diverge."""
+    cannot diverge.  The two output scatters z[p]=w, y[q]=z compose into
+    one static gather (y = w[p⁻¹∘q⁻¹] — permutation inverses are known at
+    analysis time), which is both faster and far cheaper to compile."""
     p_ = jnp.asarray(p)
-    q_ = jnp.asarray(q)
+    out_perm = _output_perm(p, q)
     r_ = jnp.asarray(row_scale, dtype=dtype)
     s_ = jnp.asarray(col_scale, dtype=dtype)
 
     def apply(vals, inode_perm, b):
         c = (r_ * b.astype(dtype))[p_][inode_perm]
         w = lu_solve(vals, c)
-        z = jnp.zeros(n, dtype).at[p_].set(w)
-        y = jnp.zeros(n, dtype).at[q_].set(z)
-        return s_ * y
+        return s_ * w[out_perm]
 
     return apply
 
@@ -348,10 +611,10 @@ class RepeatedSolveEngine:
                                               + LU substitution fused)
       apply_batched(vals, inode, B)    -> X   (K, n) — or (K, n, m) for
                                               multi-RHS — via the natively
-                                              batched tri-solve (segment-sum
-                                              levels, or the Pallas-TRSM
-                                              node-block path when
-                                              ``use_pallas=True``)
+                                              batched tri-solve (scatter-add
+                                              levels + scanned narrow tail,
+                                              or the Pallas-TRSM node-block
+                                              path when ``use_pallas=True``)
       refined_batched_solver(ip, ix)   -> the *fused* batched solve:
                                               substitution + device CSR
                                               residual matvec + the whole
@@ -368,7 +631,8 @@ class RepeatedSolveEngine:
     def __init__(self, plan: FactorPlan, ss, *, src_map, scale_map, p, q,
                  row_scale, col_scale, perturb_eps: float = 1e-8,
                  dtype=jnp.float64, use_pallas: bool = False,
-                 interpret: bool = True):
+                 interpret: bool = True, schedule: str = "bucketed",
+                 bulk_min_width: int = 8):
         if np.dtype(dtype) == np.float64 and not jax.config.jax_enable_x64:
             # without this, float64 silently degrades to float32 and every
             # solve limps through refinement at ~1e-6 residuals
@@ -379,7 +643,9 @@ class RepeatedSolveEngine:
         self.n = plan.n
         self.dtype = dtype
         factor_fn = make_factor_fn(plan, perturb_eps=perturb_eps, dtype=dtype,
-                                   use_pallas=use_pallas, interpret=interpret)
+                                   use_pallas=use_pallas, interpret=interpret,
+                                   schedule=schedule,
+                                   bulk_min_width=bulk_min_width)
         lu_solve, lut_solve = make_lu_solver(ss, dtype=dtype)
         lu_solve_b = make_batched_lu_solver(ss, dtype=dtype,
                                             use_pallas=use_pallas,
@@ -387,7 +653,7 @@ class RepeatedSolveEngine:
         src = jnp.asarray(src_map)
         scl = jnp.asarray(scale_map, dtype=dtype)
         p_ = jnp.asarray(p)
-        q_ = jnp.asarray(q)
+        out_perm = _output_perm(p, q)
         r_ = jnp.asarray(row_scale, dtype=dtype)
         s_ = jnp.asarray(col_scale, dtype=dtype)
         n = self.n
@@ -405,8 +671,9 @@ class RepeatedSolveEngine:
             idx = inode_perm[:, :, None] if multi else inode_perm
             c = jnp.take_along_axis(c, idx, axis=1)
             w = lu_solve_b(vals, c)
-            z = jnp.zeros_like(w).at[:, p_].set(w)
-            y = jnp.zeros_like(z).at[:, q_].set(z)
+            # z[p]=w; y[q]=z composed into one static gather (see
+            # make_permuted_apply)
+            y = w[:, out_perm]
             return y * (s_[:, None] if multi else s_)
 
         self._apply_batched_impl = _apply_batched
@@ -456,15 +723,20 @@ class RepeatedSolveEngine:
             def expand(m):                 # mask (K,)|(K,m) -> broadcast to b
                 return m[:, None, :] if multi else m[:, None]
 
-            x = apply_b(vals, inode_perm, b)
-            r = b - matvec(a_vals, x)
-            resid = jnp.sum(jnp.abs(r), axis=1) / bnorm
+            # the base solve is iteration 0 of the loop (x=0, r=b,
+            # resid=inf), so the substitution pipeline is traced — and
+            # compiled — exactly once instead of once outside and once in
+            # the loop body; the iterate sequence is unchanged
+            # (0 + A⁻¹b ≡ the old explicit base solve).
+            x = jnp.zeros_like(b)
+            r = b
+            resid = jnp.full(bnorm.shape, jnp.inf, dtype)
             alive = jnp.ones(resid.shape, bool)
             n_ref = jnp.zeros(resid.shape, jnp.int32)
 
             def cond(carry):
                 _, _, resid, alive, _, it = carry
-                return (it < max_iter) & jnp.any(alive & (resid > tol))
+                return (it < max_iter + 1) & jnp.any(alive & (resid > tol))
 
             def body(carry):
                 x, r, resid, alive, n_ref, it = carry
@@ -472,17 +744,21 @@ class RepeatedSolveEngine:
                 x2 = x + apply_b(vals, inode_perm, r)
                 r2 = b - matvec(a_vals, x2)
                 resid2 = jnp.sum(jnp.abs(r2), axis=1) / bnorm
-                improved = resid2 < resid
+                # iteration 0 IS the base solve: accepted unconditionally
+                # (like the old explicit pre-loop solve), so a NaN/inf base
+                # residual surfaces in x instead of masking back to 0
+                improved = (resid2 < resid) | (it == 0)
                 upd = need & improved
                 x = jnp.where(expand(upd), x2, x)
                 r = jnp.where(expand(upd), r2, r)
                 resid = jnp.where(upd, resid2, resid)
                 alive = alive & (improved | ~need)
-                return x, r, resid, alive, n_ref + upd, it + 1
+                n_ref = n_ref + (upd & (it > 0))     # iteration 0 ≡ solve
+                return x, r, resid, alive, n_ref, it + 1
 
             x, r, resid, alive, n_ref, it = jax.lax.while_loop(
                 cond, body, (x, r, resid, alive, n_ref, jnp.int32(0)))
-            return x, resid, it, n_ref
+            return x, resid, jnp.maximum(it - 1, 0), n_ref
 
         solver = jax.jit(solve_refined)
         self._refined_cache[key] = solver

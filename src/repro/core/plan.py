@@ -208,11 +208,24 @@ def build_plan(pat_sym: CSR, numeric: CSR, sym: Symbolic, mode: str = "hybrid",
                       row_perm_slots=row_perm_slots)
 
 
-def plan_stats(plan: FactorPlan) -> dict:
+def plan_stats(plan: FactorPlan, include_buckets: bool = True,
+               bulk_min_width: int = 8) -> dict:
+    """Plan statistics; with ``include_buckets`` (default) also the
+    level-bucketed factor schedule's bucket counts, pad-waste fraction and
+    bulk-node coverage — the numbers to revisit ``kernel_select``
+    thresholds against (a mode that looks good on padded_flops can still
+    lose on pad_waste_frac / trace size).  Pass the analysis's
+    ``opts.bulk_min_width`` so the bucket stats describe the schedule the
+    engine actually runs."""
     widths = np.array([nd.width for nd in plan.nodes])
     nrs = np.array([nd.nr for nd in plan.nodes])
     n_edges = sum(len(nd.edges) for nd in plan.nodes)
+    bucket = {}
+    if include_buckets:
+        from .structure import bucket_stats
+        bucket = bucket_stats(plan, bulk_min_width=bulk_min_width)
     return dict(
+        **bucket,
         mode=plan.mode,
         n_nodes=plan.n_nodes,
         n_edges=n_edges,

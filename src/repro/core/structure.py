@@ -153,6 +153,443 @@ def block_schedule(plan: FactorPlan) -> list:
     return nodes
 
 
+# --------------------------------------------------------------------------
+# level-bucketed factorization schedule: the O(levels) trace data structure
+# --------------------------------------------------------------------------
+#
+# The unrolled jax factor path emits O(nodes + edges) XLA ops, which caps
+# compile time at toy sizes.  This schedule regroups the plan's level
+# schedule into static shape buckets so the traced program is
+# O(levels × shape-buckets):
+#
+#   per level ℓ (ascending):
+#     1. internal factorization of every level-ℓ node — width-1 nodes are one
+#        vectorized diagonal perturbation (DiagBucket); wider nodes on wide
+#        (bulk) levels are one vmapped dense panel LU per padded shape
+#        (PanelBucket); wider nodes on narrow levels keep the per-node dense
+#        panel LU (the paper's sequential mode — `seq` on the step);
+#     2. application of every edge OUT of level-ℓ sources — one batched
+#        gather + TRSM + GEMM + scatter per padded shape (EdgeBucket).
+#        Edges are bucketed on *every* level, narrow ones included: in a
+#        sparse LU the late narrow levels own the densest edge lists, so
+#        leaving them unrolled would keep the trace O(edges).
+#
+# Correctness of the right-looking per-level sweep: two same-level nodes
+# never share an edge, so (a) an edge's multiplier columns (the source's
+# block columns inside the target pattern) receive no further updates once
+# the source level is factored, and (b) same-level edges into one target
+# touch disjoint multiplier columns and purely-additive trailing columns.
+# The gathered values therefore equal the left-looking ones exactly; only
+# the floating-point summation order of trailing updates differs.
+#
+# Padding never changes the arithmetic: index matrices point padded gather
+# positions at a constant 0-slot (or an identity-pivot sentinel slot — a
+# huge constant that behaves as an un-pickable, never-"small" pivot and
+# divides padded zeros to exact zeros — on padded block diagonals, so
+# padded pivots are exact identity no-ops) and padded scatter positions at a
+# write-only scratch slot.  All three live past the end of the value buffer.
+_PAD_ZERO, _PAD_ONE, _PAD_SCRATCH = 0, 1, 2     # offsets past total_slots
+
+
+def _pad_dim(v: int) -> int:
+    """Round a bucket dimension up to the next power of two (small static
+    shape vocabulary → few distinct traced subcomputations)."""
+    return 1 if v <= 1 else int(2 ** np.ceil(np.log2(v)))
+
+
+def _pad8(v: int) -> int:
+    """Round a merged (max-within-bucket) dimension up to a sublane
+    multiple; 0 stays 0 (empty part)."""
+    return 0 if v <= 0 else -(-v // 8) * 8
+
+
+def segment_levels(dims: list, max_groups: int = 12) -> list:
+    """Partition an ordered list of per-level dimension tuples into runs
+    whose per-dim max/min ratio is bounded — the shared chunking heuristic
+    of the factor scan and the tri-solve scan.
+
+    Group count is trace size, so the allowed pad ratio escalates (4, 16,
+    64, …) until at most ``max_groups`` runs remain; padded work on the
+    tiny narrow-tail levels stays negligible.  Returns a list of
+    (start, end) index pairs (end exclusive)."""
+    dims = [tuple(max(int(d), 1) for d in t) for t in dims]
+
+    def _segment(ratio):
+        groups = []
+        i = 0
+        while i < len(dims):
+            j = i
+            lo = hi = None
+            while j < len(dims):
+                d = dims[j]
+                if lo is None:
+                    lo, hi = d, d
+                else:
+                    nlo = tuple(min(a, b) for a, b in zip(lo, d))
+                    nhi = tuple(max(a, b) for a, b in zip(hi, d))
+                    if any(h > ratio * l for l, h in zip(nlo, nhi)):
+                        break
+                    lo, hi = nlo, nhi
+                j += 1
+            groups.append((i, j))
+            i = j
+        return groups
+
+    ratio = 4
+    groups = _segment(ratio)
+    while len(groups) > max_groups and ratio < 1 << 30:
+        ratio *= 4
+        groups = _segment(ratio)
+    return groups
+
+
+@dataclasses.dataclass
+class DiagBucket:
+    """All width-1 nodes of one level: internal LU degenerates to pivot
+    perturbation of the diagonal slot."""
+    level: int
+    nids: np.ndarray        # (B,)
+    slots: np.ndarray       # (B,) flat diagonal slots
+
+
+@dataclasses.dataclass
+class PanelBucket:
+    """Width>1 nodes of one level sharing a padded panel shape.
+
+    The gathered panel is column-reordered to [diagonal block | U suffix |
+    L prefix] so the elimination window is the static range [0, wu) for
+    every node regardless of its lsize; the L prefix rides along at the end
+    purely so in-block row pivoting permutes it too."""
+    level: int
+    nr: int                 # padded block rows
+    wu: int                 # elimination width: padded nr + padded usize
+    wt: int                 # gathered width: wu + padded lsize
+    nids: np.ndarray        # (B,)
+    gather: np.ndarray      # (B, nr, wt) flat slots (pads → 0/1 slots)
+    scatter: np.ndarray     # (B, nr, wt) flat slots (pads → scratch)
+    rows: np.ndarray        # (B, nr) global row ids (pads → n)
+
+
+@dataclasses.dataclass
+class EdgeBucket:
+    """Edges out of one level's sources sharing a padded (k, nr, m) shape:
+    one batched TRSM + GEMM and ONE combined scatter-add per bucket.
+
+    The multiplier columns' ``.set(lts)`` is expressed as ``.add(lts - X)``
+    (their pre-update value is exactly the gathered X — no other same-level
+    edge touches them), so multiplier write-back and trailing update fuse
+    into a single duplicate-accumulating scatter over ``write_idx`` —
+    XLA:CPU compile time is dominated by scatter op count."""
+    src_level: int
+    k: int                  # padded source block width
+    nr: int                 # padded target rows
+    m: int                  # padded source U-suffix width
+    srcs: np.ndarray        # (E,) source nids
+    tgts: np.ndarray        # (E,) target nids
+    src_idx: np.ndarray     # (E, k, k+m) source rows [diag block | U suffix]
+                            # (block-diagonal pads → 1, others → 0)
+    x_idx: np.ndarray       # (E, nr, k) target multiplier columns (pads → 0)
+    write_idx: np.ndarray   # (E, nr*(k+m)) combined scatter: first nr*k
+                            # entries are the multiplier positions, the rest
+                            # the trailing positions (pads → scratch)
+
+
+@dataclasses.dataclass
+class LevelStep:
+    level: int
+    diag: DiagBucket | None
+    panels: list            # list[PanelBucket]
+    seq: np.ndarray         # node ids factored per-node (narrow-level wide
+                            # nodes); their edges are still bucketed
+    edges: list             # list[EdgeBucket]
+
+
+@dataclasses.dataclass
+class ScanChunk:
+    """A run of consecutive all-width-1 levels executed as ONE ``lax.scan``
+    whose body is traced once — the trace-size endgame for the long narrow
+    tail of circuit-style level schedules.
+
+    All levels in the chunk are padded to shared (D, E, M) shapes; the
+    sentinel slots make the padding maskless (padded diagonal slots read
+    the huge identity-pivot sentinel — never "small", rewritten verbatim;
+    padded gathers read 0 → zero multipliers and zero updates; padded
+    writes land in scratch)."""
+    lv0: int
+    lv1: int                # exclusive
+    dsl: np.ndarray         # (L, D) diag slots, pads → one slot
+    x_idx: np.ndarray       # (L, E) multiplier gathers, pads → zero slot
+    src_idx: np.ndarray     # (L, E, 1+M) source rows [diag | U], pads:
+                            # col 0 → one slot, cols 1: → zero slot
+    write_idx: np.ndarray   # (L, E, 1+M) combined scatter, pads → scratch
+
+
+@dataclasses.dataclass
+class BucketSchedule:
+    n: int
+    total_slots: int
+    n_ext: int              # total_slots + 3 (zero / one / scratch slots)
+    zero_slot: int
+    one_slot: int
+    scratch_slot: int
+    n_bulk_levels: int
+    steps: list             # list[LevelStep], unrolled level prefix
+    scan_chunks: list       # list[ScanChunk], the scanned width-1 suffix
+
+
+def build_bucket_schedule(plan: FactorPlan,
+                          bulk_min_width: int = 8) -> BucketSchedule:
+    """Pre-flatten the plan's level schedule into static per-(level, shape)
+    index arrays (see module comment above for the execution semantics).
+    ``bulk_min_width`` is the dual-mode threshold: levels with fewer nodes
+    run their wide-node internal LUs per-node (sequential mode)."""
+    nodes = plan.nodes
+    offs = plan.panel_offset
+    n, n_nodes = plan.n, plan.n_nodes
+    total = plan.total_slots
+    assert total + 3 < np.iinfo(np.int32).max, "plan too large for int32 maps"
+    zero, one, scr = (total + _PAD_ZERO, total + _PAD_ONE,
+                      total + _PAD_SCRATCH)
+
+    # ------- group all edges by (source level, padded k/nr class) ----------
+    # m (the source U-suffix width) is NOT part of the key: every (level,
+    # k, nr) class forms one bucket, padded to its max m, and is then split
+    # only where padding waste would exceed 4x (``_waste_split``).  Bucket
+    # count — i.e. trace size — is what compile time scales with; bounded
+    # m-padding waste is just zero lanes through the gather/GEMM/scatter.
+    edge_groups: dict = {}
+    for nd in nodes:
+        for e in nd.edges:
+            snd = nodes[e.src]
+            key = (snd.level, _pad_dim(snd.nr), _pad_dim(nd.nr))
+            edge_groups.setdefault(key, []).append((e, nd))
+
+    def _edge_m(pair):
+        e, _ = pair
+        return len(e.col_map) - nodes[e.src].nr
+
+    def _waste_split(pairs, ratio=4):
+        """Split a bucket's edge list into runs whose max/min m ratio is
+        bounded — bounded pad waste at a bounded bucket-count increase."""
+        pairs = sorted(pairs, key=_edge_m, reverse=True)
+        out, cur = [], [pairs[0]]
+        cap = max(_edge_m(pairs[0]), 1)
+        for p in pairs[1:]:
+            if cap > ratio * max(_edge_m(p), 1):
+                out.append(cur)
+                cur, cap = [], max(_edge_m(p), 1)
+            cur.append(p)
+        out.append(cur)
+        return out
+
+    def _edge_bucket(key, pairs) -> EdgeBucket:
+        lv, kp, nrp = key
+        mp = _pad8(max(_edge_m(p) for p in pairs))
+        ne = len(pairs)
+        src_idx = np.full((ne, kp, kp + mp), zero, dtype=np.int32)
+        src_idx[:, np.arange(kp), np.arange(kp)] = one
+        x_idx = np.full((ne, nrp, kp), zero, dtype=np.int32)
+        lts_idx = np.full((ne, nrp, kp), scr, dtype=np.int32)
+        upd_idx = np.full((ne, nrp, mp), scr, dtype=np.int32)
+        srcs = np.empty(ne, dtype=np.int64)
+        tgts = np.empty(ne, dtype=np.int64)
+        for i, (e, nd) in enumerate(pairs):
+            snd = nodes[e.src]
+            k, m, nr = snd.nr, len(e.col_map) - snd.nr, nd.nr
+            srcs[i], tgts[i] = snd.nid, nd.nid
+            srow = (offs[snd.nid] + snd.lsize
+                    + np.arange(k, dtype=np.int64)[:, None] * snd.width)
+            src_idx[i, :k, :k] = srow + np.arange(k)[None, :]
+            src_idx[i, :k, kp:kp + m] = srow + k + np.arange(m)[None, :]
+            trow = (offs[nd.nid]
+                    + np.arange(nr, dtype=np.int64)[:, None] * nd.width)
+            x_idx[i, :nr, :k] = trow + e.col_map[None, :k]
+            lts_idx[i, :nr, :k] = trow + e.col_map[None, :k]
+            upd_idx[i, :nr, :m] = trow + e.col_map[None, k:]
+        write_idx = np.concatenate([lts_idx.reshape(ne, -1),
+                                    upd_idx.reshape(ne, -1)], axis=1)
+        return EdgeBucket(src_level=lv, k=kp, nr=nrp, m=mp, srcs=srcs,
+                          tgts=tgts, src_idx=src_idx, x_idx=x_idx,
+                          write_idx=write_idx)
+
+    def _panel_bucket(lv, nrp, nids) -> PanelBucket:
+        usp = _pad8(max(nodes[t].usize for t in nids))
+        lsp = _pad8(max(nodes[t].lsize for t in nids))
+        wu, wt = nrp + usp, nrp + usp + lsp
+        nbk = len(nids)
+        gather = np.full((nbk, nrp, wt), zero, dtype=np.int32)
+        gather[:, np.arange(nrp), np.arange(nrp)] = one   # identity diag pads
+        scatter = np.full((nbk, nrp, wt), scr, dtype=np.int32)
+        rows = np.full((nbk, nrp), n, dtype=np.int32)
+        for i, t in enumerate(nids):
+            nd = nodes[t]
+            nr, w, ls, us = nd.nr, nd.width, nd.lsize, nd.usize
+            base = (offs[t]
+                    + np.arange(nr, dtype=np.int64)[:, None] * w)
+            # column-reordered [block | suffix | prefix] slot map
+            cols = np.concatenate([ls + np.arange(nr),            # block
+                                   np.full(nrp - nr, -1),         # diag pads
+                                   ls + nr + np.arange(us),       # suffix
+                                   np.full(usp - us, -1),
+                                   np.arange(ls),                 # prefix
+                                   np.full(lsp - ls, -1)])
+            real = cols >= 0
+            slots = base + cols[real][None, :]                    # (nr, n_real)
+            gather[i][:nr, real] = slots
+            scatter[i][:nr, real] = slots
+            rows[i, :nr] = nd.r0 + np.arange(nr)
+        return PanelBucket(level=lv, nr=nrp, wu=wu, wt=wt,
+                           nids=np.asarray(nids, dtype=np.int64),
+                           gather=gather, scatter=scatter, rows=rows)
+
+    # ------- scannable suffix: maximal run of all-width-1 levels -----------
+    # (sources AND targets width 1 — target levels of a suffix edge are
+    # later levels, themselves in the suffix, so checking node widths per
+    # level suffices).  These levels' work collapses to one lax.scan body
+    # per chunk instead of one traced step per level.
+    n_levels = len(plan.levels)
+    scan_start = n_levels
+    while (scan_start > 0
+           and all(nodes[int(t)].nr == 1
+                   for t in plan.levels[scan_start - 1])
+           and len(plan.levels[scan_start - 1]) < bulk_min_width):
+        scan_start -= 1
+
+    steps = []
+    for lv in range(scan_start):
+        nids = plan.levels[lv]
+        bulk = len(nids) >= bulk_min_width
+        ones = [int(t) for t in nids if nodes[t].nr == 1]
+        diag = None
+        if ones:
+            diag = DiagBucket(
+                level=lv, nids=np.asarray(ones, dtype=np.int64),
+                slots=plan.row_perm_slots[
+                    [nodes[t].r0 for t in ones]].astype(np.int32))
+        wide = [int(t) for t in nids if nodes[t].nr > 1]
+        panels, seq = [], []
+        if bulk:
+            wide_groups: dict = {}
+            for t in wide:
+                wide_groups.setdefault(_pad_dim(nodes[t].nr), []).append(t)
+            panels = [_panel_bucket(lv, nrp, nids_g)
+                      for nrp, nids_g in sorted(wide_groups.items())]
+        else:
+            seq = wide
+        edges = [_edge_bucket(key, sub)
+                 for key, pairs in sorted(edge_groups.items(),
+                                          key=lambda kv: kv[0])
+                 if key[0] == lv
+                 for sub in _waste_split(pairs)]
+        steps.append(LevelStep(level=lv, diag=diag, panels=panels,
+                               seq=np.asarray(seq, dtype=np.int64),
+                               edges=edges))
+
+    # ------- scan chunks over the width-1 suffix ---------------------------
+    def _level_raw(lv):
+        """(diag_slots, [(x, src_row_base, m, col_map, toff, tw)]) of one
+        scanned level — everything is width 1."""
+        dsl = plan.row_perm_slots[
+            [nodes[int(t)].r0 for t in plan.levels[lv]]].astype(np.int64)
+        epairs = []
+        for key, pairs in edge_groups.items():
+            if key[0] == lv:
+                epairs.extend(pairs)
+        return dsl, epairs
+
+    raw = {lv: _level_raw(lv) for lv in range(scan_start, n_levels)}
+
+    def _dims(lv):
+        dsl, epairs = raw[lv]
+        return (len(dsl), len(epairs),
+                max((_edge_m(p) for p in epairs), default=0))
+
+    groups = [(i + scan_start, j + scan_start)
+              for i, j in segment_levels(
+                  [_dims(lv) for lv in range(scan_start, n_levels)])]
+
+    chunks = []
+    for lv0, lv1 in groups:
+        dmax, emax, mmax = (max(max(vs), 1) for vs in zip(
+            *(_dims(lv) for lv in range(lv0, lv1))))
+        L = lv1 - lv0
+        dsl_a = np.full((L, dmax), one, dtype=np.int32)
+        x_a = np.full((L, emax), zero, dtype=np.int32)
+        src_a = np.full((L, emax, 1 + mmax), zero, dtype=np.int32)
+        src_a[:, :, 0] = one
+        wr_a = np.full((L, emax, 1 + mmax), scr, dtype=np.int32)
+        for l, lvx in enumerate(range(lv0, lv1)):
+            dsl, epairs = raw[lvx]
+            dsl_a[l, :len(dsl)] = dsl
+            for i, (e, nd) in enumerate(epairs):
+                snd = nodes[e.src]
+                m = len(e.col_map) - 1
+                srow = offs[snd.nid] + snd.lsize
+                src_a[l, i, 0] = srow
+                src_a[l, i, 1:1 + m] = srow + 1 + np.arange(m)
+                toff = offs[nd.nid]
+                x_a[l, i] = toff + e.col_map[0]
+                wr_a[l, i, 0] = toff + e.col_map[0]
+                wr_a[l, i, 1:1 + m] = toff + e.col_map[1:]
+        chunks.append(ScanChunk(lv0=lv0, lv1=lv1, dsl=dsl_a, x_idx=x_a,
+                                src_idx=src_a, write_idx=wr_a))
+
+    return BucketSchedule(n=n, total_slots=total, n_ext=total + 3,
+                          zero_slot=zero, one_slot=one, scratch_slot=scr,
+                          n_bulk_levels=plan.n_bulk_levels, steps=steps,
+                          scan_chunks=chunks)
+
+
+def get_bucket_schedule(plan: FactorPlan,
+                        bulk_min_width: int = 8) -> BucketSchedule:
+    """Build-once cache of the bucket schedule on the plan object."""
+    cache = getattr(plan, "_bucket_schedules", None)
+    if cache is None:
+        cache = {}
+        plan._bucket_schedules = cache
+    sched = cache.get(bulk_min_width)
+    if sched is None:
+        sched = build_bucket_schedule(plan, bulk_min_width=bulk_min_width)
+        cache[bulk_min_width] = sched
+    return sched
+
+
+def bucket_stats(plan: FactorPlan, bulk_min_width: int = 8) -> dict:
+    """Bucket-count / padding statistics of the bucketed factor schedule
+    (consumed by ``plan.plan_stats`` so kernel_select thresholds can be
+    revisited against real pad-waste numbers)."""
+    sched = get_bucket_schedule(plan, bulk_min_width=bulk_min_width)
+    n_panel = sum(len(s.panels) for s in sched.steps)
+    n_diag = sum(1 for s in sched.steps if s.diag is not None)
+    n_edge = sum(len(s.edges) for s in sched.steps)
+    n_seq = sum(len(s.seq) for s in sched.steps)
+    n_scanned = sum(c.lv1 - c.lv0 for c in sched.scan_chunks)
+    gathered = 0
+    real = 0
+    for s in sched.steps:
+        for pb in s.panels:
+            gathered += pb.gather.size
+            real += int((pb.gather < sched.total_slots).sum())
+        for eb in s.edges:
+            for arr in (eb.src_idx, eb.x_idx, eb.write_idx):
+                gathered += arr.size
+                real += int((arr < sched.total_slots).sum())
+    for c in sched.scan_chunks:
+        for arr in (c.dsl, c.x_idx, c.src_idx, c.write_idx):
+            gathered += arr.size
+            real += int((arr < sched.total_slots).sum())
+    return dict(
+        n_seq_nodes=n_seq,
+        n_diag_buckets=n_diag,
+        n_panel_buckets=n_panel,
+        n_edge_buckets=n_edge,
+        n_scan_chunks=len(sched.scan_chunks),
+        n_scanned_levels=n_scanned,
+        bulk_node_coverage=1.0 - n_seq / max(plan.n_nodes, 1),
+        pad_waste_frac=(gathered - real) / max(gathered, 1),
+    )
+
+
 @dataclasses.dataclass
 class SolveStructure:
     """Everything the JAX solve/adjoint needs, all static."""

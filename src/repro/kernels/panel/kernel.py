@@ -56,6 +56,79 @@ def _panel_lu_kernel(panel_ref, eps_ref, out_ref, perm_ref, nper_ref, *,
     nper_ref[...] = nper.reshape(nper_ref.shape)
 
 
+def _panel_lu_bucketed_kernel(panel_ref, eps_ref, out_ref, perm_ref,
+                              nper_ref, *, nr: int, wu: int):
+    """One bucket member per grid step: dense LU of a column-reordered
+    panel [diag block | U suffix | L prefix].  Elimination is masked to the
+    static window [0, wu); trailing (prefix) columns only row-swap.  Padded
+    block diagonals are identity (set up by the gather map), so padded
+    pivot steps are exact no-ops and never count as perturbations."""
+    panel = panel_ref[0]
+    eps_p = eps_ref[0, 0]
+    wt = panel.shape[1]
+    perm = jnp.arange(nr, dtype=jnp.int32)
+    nper = jnp.zeros((), jnp.int32)
+
+    def body(j, carry):
+        panel, perm, nper = carry
+        col = jax.lax.dynamic_slice_in_dim(panel, j, 1, axis=1)[:, 0]
+        rows = jnp.arange(nr)
+        cand = jnp.where(rows >= j, jnp.abs(col), -1.0)
+        p = jnp.argmax(cand)
+        swap = jnp.arange(nr).at[j].set(p).at[p].set(j)
+        panel = panel[swap, :]
+        perm = perm[swap]
+        piv = panel[j, j]
+        small = jnp.abs(piv) < eps_p
+        piv = jnp.where(small, jnp.where(piv >= 0, eps_p, -eps_p), piv)
+        panel = panel.at[j, j].set(piv)
+        nper = nper + small.astype(jnp.int32)
+        l = panel[:, j] / piv
+        l = l * (rows > j).astype(panel.dtype)
+        cmask = ((jnp.arange(wt) > j) & (jnp.arange(wt) < wu))
+        urow = panel[j, :] * cmask.astype(panel.dtype)
+        panel = panel - l[:, None] * urow[None, :]       # VPU rank-1
+        panel = panel.at[:, j].set(
+            jnp.where(rows > j, l, panel[:, j]))
+        return panel, perm, nper
+
+    panel, perm, nper = jax.lax.fori_loop(0, nr, body, (panel, perm, nper))
+    out_ref[0] = panel
+    perm_ref[0] = perm
+    nper_ref[0] = nper.reshape(nper_ref.shape[1:])
+
+
+@functools.partial(jax.jit, static_argnames=("wu", "interpret"))
+def panel_lu_bucketed_p(panels: jax.Array, eps_p: jax.Array, wu: int,
+                        interpret: bool = True):
+    """Bucketed panel LU: panels (B, nr, wt), one grid step per bucket
+    member (the leading bucket dim is the Pallas grid).  Returns the
+    factored panels, per-panel local pivot permutations (B, nr) and
+    per-panel perturbation counts (B,)."""
+    B, nr, wt = panels.shape
+    eps2d = jnp.reshape(eps_p.astype(panels.dtype), (1, 1))
+    out, perm, nper = pl.pallas_call(
+        functools.partial(_panel_lu_bucketed_kernel, nr=nr, wu=wu),
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, nr, wt), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, nr, wt), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, nr), lambda b: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nr, wt), panels.dtype),
+            jax.ShapeDtypeStruct((B, nr), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(panels, eps2d)
+    return out, perm, nper[:, 0]
+
+
 @functools.partial(jax.jit, static_argnames=("nr", "lsize", "interpret"))
 def panel_lu_p(panel: jax.Array, eps_p: jax.Array, nr: int, lsize: int,
                interpret: bool = True):

@@ -1,11 +1,12 @@
-"""jit'd wrapper for the panel-LU Pallas kernel."""
+"""jit'd wrappers for the panel-LU Pallas kernels (scalar + bucketed)."""
 import jax
 import jax.numpy as jnp
 
-from .kernel import panel_lu_p
-from .ref import panel_lu_ref
+from .kernel import panel_lu_bucketed_p, panel_lu_p
+from .ref import panel_lu_bucketed_ref, panel_lu_ref
 
-__all__ = ["panel_lu", "panel_lu_ref"]
+__all__ = ["panel_lu", "panel_lu_batched", "panel_lu_ref",
+           "panel_lu_bucketed_ref"]
 
 
 def panel_lu(panel: jax.Array, nr: int, lsize: int, eps_p,
@@ -14,3 +15,12 @@ def panel_lu(panel: jax.Array, nr: int, lsize: int, eps_p,
     eps = jnp.asarray(eps_p, dtype=panel.dtype)
     out, perm, nper = panel_lu_p(panel, eps, nr, lsize, interpret=interpret)
     return out, perm, nper[0]
+
+
+def panel_lu_batched(panels: jax.Array, wu: int, eps_p,
+                     interpret: bool = True):
+    """Bucketed panel LU on column-reordered panels (B, nr, wt): the
+    leading bucket dim is the Pallas grid, elimination masked to [0, wu).
+    Returns (panels, perms (B, nr) int32, n_perturb (B,) int32)."""
+    eps = jnp.asarray(eps_p, dtype=panels.dtype)
+    return panel_lu_bucketed_p(panels, eps, wu, interpret=interpret)

@@ -35,3 +35,39 @@ def panel_lu_ref(panel: jax.Array, nr: int, lsize: int, eps_p):
         return panel, perm, nper
 
     return jax.lax.fori_loop(0, nr, body, (panel, perm, nper))
+
+
+def panel_lu_bucketed_ref(panels: jax.Array, wu: int, eps_p):
+    """Oracle for the bucketed kernel: B independent LUs of column-reordered
+    panels (B, nr, wt), elimination masked to the window [0, wu) (trailing
+    columns — the L prefix — only row-swap).  Returns
+    (panels, perms (B, nr), n_perturb (B,))."""
+    B, nr, wt = panels.shape
+    rows = jnp.arange(nr)
+    colr = jnp.arange(wt)
+    perm = jnp.broadcast_to(rows.astype(jnp.int32), (B, nr))
+    nper = jnp.zeros((B,), jnp.int32)
+
+    def body(j, carry):
+        P, perm, nper = carry
+        col = jax.lax.dynamic_slice_in_dim(P, j, 1, axis=2)[:, :, 0]
+        cand = jnp.where(rows[None, :] >= j, jnp.abs(col), -1.0)
+        p = jnp.argmax(cand, axis=1)
+        base = jnp.broadcast_to(rows, (B, nr))
+        swap = base.at[:, j].set(p)
+        swap = jnp.where(base == p[:, None], j, swap)
+        P = jnp.take_along_axis(P, swap[:, :, None], axis=1)
+        perm = jnp.take_along_axis(perm, swap, axis=1)
+        piv = P[:, j, j]
+        small = jnp.abs(piv) < eps_p
+        piv = jnp.where(small, jnp.where(piv >= 0, eps_p, -eps_p), piv)
+        P = P.at[:, j, j].set(piv)
+        nper = nper + small.astype(jnp.int32)
+        l = P[:, :, j] / piv[:, None]
+        l = l * (rows[None, :] > j).astype(P.dtype)
+        urow = P[:, j, :] * ((colr > j) & (colr < wu)).astype(P.dtype)[None, :]
+        P = P - l[:, :, None] * urow[:, None, :]
+        P = P.at[:, :, j].set(jnp.where(rows[None, :] > j, l, P[:, :, j]))
+        return P, perm, nper
+
+    return jax.lax.fori_loop(0, nr, body, (panels, perm, nper))

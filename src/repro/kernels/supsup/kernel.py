@@ -31,6 +31,47 @@ def _gemm_update_kernel(c_ref, a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _bmm_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[0], b_ref[0],
+                            preferred_element_type=acc_ref.dtype)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _done():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tn", "tk", "interpret"))
+def bmm(a: jax.Array, b: jax.Array, tn: int = 128, tk: int = 128,
+        interpret: bool = True) -> jax.Array:
+    """Batched A @ B for the bucketed sup-sup update: a (E, nr, k),
+    b (E, k, m) → (E, nr, m).  The leading bucket dim is the outer Pallas
+    grid axis; each bucket member's GEMM tiles its m/k dims into VMEM with
+    a scratch accumulator over the contraction axis (the nr dim of one
+    supernode edge is ≤ 128 and stays whole)."""
+    E, nr, k = a.shape
+    m = b.shape[2]
+    tn, tk = min(tn, m), min(tk, k)
+    grid = (E, pl.cdiv(m, tn), pl.cdiv(k, tk))
+    return pl.pallas_call(
+        functools.partial(_bmm_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, nr, tk), lambda e, j, l: (e, 0, l)),   # A
+            pl.BlockSpec((1, tk, tn), lambda e, j, l: (e, l, j)),   # B
+        ],
+        out_specs=pl.BlockSpec((1, nr, tn), lambda e, j, l: (e, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((E, nr, m), a.dtype),
+        # fp32 accumulation on the MXU; f64 only in CPU-interpret testing
+        scratch_shapes=[pltpu.VMEM(
+            (nr, tn), jnp.float64 if a.dtype == jnp.float64 else jnp.float32)],
+        interpret=interpret,
+    )(a, b)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("tm", "tn", "tk", "interpret"))
 def gemm_update(c: jax.Array, a: jax.Array, b: jax.Array,

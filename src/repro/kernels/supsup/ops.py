@@ -3,10 +3,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.trisolve import ops as trisolve_ops
-from .kernel import gemm_update
+from .kernel import bmm, gemm_update
 from .ref import supsup_update_ref, gemm_update_ref
 
-__all__ = ["supsup_update", "gemm", "supsup_update_ref", "gemm_update_ref"]
+__all__ = ["supsup_update", "gemm", "gemm_batched", "supsup_update_ref",
+           "gemm_update_ref"]
 
 
 def supsup_update(x: jax.Array, src: jax.Array, k: int,
@@ -20,6 +21,29 @@ def supsup_update(x: jax.Array, src: jax.Array, k: int,
     lts = trisolve_ops.trsm(src[:, :k], x[:, :k], interpret=interpret)
     xr = gemm(x[:, k:], lts, src[:, k:], interpret=interpret)
     return lts, xr
+
+
+def gemm_batched(a: jax.Array, b: jax.Array,
+                 interpret: bool = True) -> jax.Array:
+    """Batched A @ B (the trailing-update GEMM of one bucketed sup-sup
+    edge application): a (E, nr, k), b (E, k, m) → (E, nr, m), padding
+    nr/k/m to sublane/lane multiples.  Zero-padding is exact: padded rows
+    and columns of the product land in scatter positions the engine
+    directs at its scratch slot."""
+    e, nr, k = a.shape
+    m = b.shape[2]
+    if m == 0 or k == 0:
+        return jnp.zeros((e, nr, m), a.dtype)
+
+    def rnd(v, mult=8):
+        return max(mult, -(-v // mult) * mult)
+
+    nrp, mp, kp = rnd(nr), rnd(m, 128 if m >= 128 else 8), rnd(k)
+    if (nrp, mp, kp) != (nr, m, k):
+        ap = jnp.zeros((e, nrp, kp), a.dtype).at[:, :nr, :k].set(a)
+        bp = jnp.zeros((e, kp, mp), b.dtype).at[:, :k, :m].set(b)
+        return bmm(ap, bp, interpret=interpret)[:, :nr, :m]
+    return bmm(a, b, interpret=interpret)
 
 
 def gemm(c: jax.Array, a: jax.Array, b: jax.Array,

@@ -79,6 +79,80 @@ def test_plan_invariants(seed, n, density, mode):
         assert abs(plan.useful_flops - plan.padded_flops) < 1e-6
 
 
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.integers(12, 70), st.floats(0.04, 0.22),
+       st.sampled_from(["rowrow", "hybrid", "supernodal"]),
+       st.sampled_from([2, 8]))
+def test_bucket_schedule_invariants(seed, n, density, mode, bmw):
+    """The level-bucketed factor schedule must be a complete, non-
+    overlapping re-grouping of the plan: every node's internal LU appears
+    exactly once (diag bucket, panel bucket, sequential list, or scanned
+    level), every edge exactly once (unrolled edge bucket or scan chunk),
+    all padded indices point at the sentinel slots, and all multiplier
+    scatter positions within a level are disjoint."""
+    from repro.core.structure import build_bucket_schedule
+
+    an = _analysis(seed, n, density, mode)
+    plan = an.plan
+    sched = build_bucket_schedule(plan, bulk_min_width=bmw)
+    total = sched.total_slots
+    sentinels = {sched.zero_slot, sched.one_slot, sched.scratch_slot}
+
+    # --- nodes covered exactly once ---------------------------------------
+    seen = []
+    for s in sched.steps:
+        if s.diag is not None:
+            seen.extend(s.diag.nids.tolist())
+            assert all(plan.nodes[t].nr == 1 for t in s.diag.nids)
+        for pb in s.panels:
+            seen.extend(pb.nids.tolist())
+            assert all(plan.nodes[t].nr > 1 for t in pb.nids)
+        seen.extend(s.seq.tolist())
+    for c in sched.scan_chunks:
+        for lv in range(c.lv0, c.lv1):
+            nids = plan.levels[lv]
+            assert all(plan.nodes[int(t)].nr == 1 for t in nids)
+            seen.extend(int(t) for t in nids)
+    assert np.array_equal(np.sort(np.asarray(seen)),
+                          np.arange(plan.n_nodes))
+
+    # --- edges covered exactly once ---------------------------------------
+    n_edges_plan = sum(len(nd.edges) for nd in plan.nodes)
+    n_edges_steps = sum(len(eb.srcs) for s in sched.steps for eb in s.edges)
+    n_edges_scan = sum(int((c.x_idx < total).sum())
+                       for c in sched.scan_chunks)
+    assert n_edges_steps + n_edges_scan == n_edges_plan
+
+    # --- padding discipline ------------------------------------------------
+    for s in sched.steps:
+        mult_slots = []
+        for eb in s.edges:
+            for arr, allowed in ((eb.src_idx, {sched.zero_slot,
+                                               sched.one_slot}),
+                                 (eb.x_idx, {sched.zero_slot}),
+                                 (eb.write_idx, {sched.scratch_slot})):
+                assert arr.min() >= 0 and arr.max() < sched.n_ext
+                pads = arr[arr >= total]
+                assert set(np.unique(pads)) <= allowed
+            # source levels all equal the step's level
+            assert all(plan.nodes[int(t)].level == s.level for t in eb.srcs)
+            mult = eb.write_idx[:, :eb.nr * eb.k].ravel()
+            mult_slots.append(mult[mult < total])
+        if mult_slots:
+            mult_all = np.concatenate(mult_slots)
+            # multiplier write-back positions are disjoint within a level
+            # (same-level sources own disjoint block columns) — the single
+            # combined scatter-.add relies on this
+            assert len(np.unique(mult_all)) == len(mult_all)
+        for pb in s.panels:
+            real = pb.scatter[pb.scatter < total]
+            assert len(np.unique(real)) == len(real)
+            # real slot count == the gathered panels' true storage
+            expect = sum(plan.nodes[t].nr * plan.nodes[t].width
+                         for t in pb.nids)
+            assert len(real) == expect
+
+
 @settings(max_examples=8, deadline=None)
 @given(st.integers(0, 10_000), st.integers(12, 60), st.floats(0.05, 0.25))
 def test_solve_structure_invariants(seed, n, density):

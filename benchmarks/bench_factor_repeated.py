@@ -24,11 +24,18 @@ points the persistent JAX compilation cache somewhere (default
 recorded compile numbers are only *cold* numbers with a fresh/disabled
 cache).
 
+``--devices N`` adds the multi-device sweep: the batched refactor+solve
+on a 1-D solver mesh over 1, 2, …, N (virtual CPU) devices
+(``HyluOptions(mesh=d)``), recorded as the ``devices_sweep`` section —
+batched refactor throughput (systems/s) vs device count.  Virtual
+devices are forced before jax initializes, so ``--devices`` must be
+handled by this process from the start (it is).
+
 Writes BENCH_repeated.json (per-matrix timings + geomean speedups over
 looped-ref) so successive PRs have a perf trajectory.
 
     PYTHONPATH=src python -m benchmarks.bench_factor_repeated \
-        [--k 32] [--quick] [--large] [--jax-cache DIR]
+        [--k 32] [--quick] [--large] [--jax-cache DIR] [--devices N]
 """
 from __future__ import annotations
 
@@ -192,6 +199,59 @@ def suite(quick=False, large=False):
     return mats
 
 
+def bench_devices_sweep(name, Ac, k, n_devices, reps=5):
+    """Batched refactor+solve throughput vs device count: the same matrix,
+    K value sets, on a 1-D solver mesh over d = 1, 2, … devices.  Every
+    mesh size runs the identical per-system program (parity is tested in
+    tests/test_sharding.py); this measures only throughput."""
+    import jax.numpy as jnp
+
+    from repro.core import HyluOptions
+    from repro.core.api import factor_batched, solve_batched
+
+    rng = np.random.default_rng(0)
+    vb = _value_drift(Ac.data, k, rng)
+    bb = rng.normal(size=(k, Ac.n))
+    counts = sorted({1, n_devices} | {d for d in (2, 4, 8, 16, 32, 64)
+                                      if d < n_devices})
+    out = dict(matrix=name, n=Ac.n, nnz=Ac.nnz, k=k, counts={})
+
+    def _best(fn):
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn()
+            ts.append(time.perf_counter() - t0)
+        return min(ts)
+
+    vdev = jnp.asarray(vb)          # committed device buffer: staging cost
+    #                                 excluded, like the single-device rows
+    for d in counts:
+        an = analyze(Ac, HyluOptions(mesh=d))
+        t0 = time.perf_counter()
+        bst = factor_batched(an, Ac, vdev)
+        solve_batched(bst, bb)
+        compile_s = time.perf_counter() - t0
+        refac_s = _best(lambda: factor_batched(an, Ac, vdev))
+        bst = factor_batched(an, Ac, vdev)
+        solve_s = _best(lambda: solve_batched(bst, bb))
+        rec = dict(devices=d, compile_s=compile_s,
+                   refac_batched_s=refac_s, solve_fused_s=solve_s,
+                   refac_systems_per_s=k / refac_s,
+                   end2end_systems_per_s=k / (refac_s + solve_s))
+        out["counts"][str(d)] = rec
+        base = out["counts"]["1"]
+        rec["speedup_refac_vs_1dev"] = (base["refac_batched_s"]
+                                        / rec["refac_batched_s"])
+        print(f"[devices] {name:14s} d={d:2d} "
+              f"refac={refac_s*1e3:7.1f}ms "
+              f"({rec['refac_systems_per_s']:8.0f} sys/s, "
+              f"{rec['speedup_refac_vs_1dev']:.2f}x vs 1dev) "
+              f"solve={solve_s*1e3:6.1f}ms compile={compile_s:4.1f}s",
+              flush=True)
+    return out
+
+
 def compile_table(records) -> str:
     """Compile-vs-run table: the bucketed trace's headline numbers."""
     lines = [f"{'matrix':14s} {'n':>6s} {'compile_scalar':>15s} "
@@ -208,9 +268,10 @@ def compile_table(records) -> str:
 
 def bench_repeated(k=32, quick=False, large=False,
                    out_path="BENCH_repeated.json", jax_cache=None,
-                   jax_cache_warm=False):
+                   jax_cache_warm=False, devices=None):
     records = {}
-    for name, Ac in suite(quick=quick, large=large):
+    mats = suite(quick=quick, large=large)
+    for name, Ac in mats:
         t0 = time.time()
         records[name] = bench_matrix(name, Ac, k)
         r = records[name]
@@ -252,6 +313,11 @@ def bench_repeated(k=32, quick=False, large=False,
     out = dict(k=k, jax_compilation_cache=jax_cache or None,
                jax_cache_warm=bool(jax_cache_warm),
                matrices=records, geomean_speedup_over_ref_loop=summary)
+    if devices and devices > 1:
+        # multi-device sweep on the first suite matrix (throughput vs
+        # device count; bit-exact parity is the test suite's job)
+        name0, Ac0 = mats[0]
+        out["devices_sweep"] = bench_devices_sweep(name0, Ac0, k, devices)
     with open(out_path, "w") as f:
         json.dump(out, f, indent=1)
     table = compile_table(records)
@@ -283,8 +349,17 @@ def main(argv=None):
                     help="persistent JAX compilation cache dir "
                          "('' disables; default $JAX_COMPILATION_CACHE_DIR "
                          "or .jax_cache)")
+    ap.add_argument("--devices", type=int, default=None, metavar="N",
+                    help="also sweep the sharded batched path over "
+                         "1..N (virtual CPU) devices -> devices_sweep "
+                         "section of the JSON")
     args = ap.parse_args(argv)
     import os
+
+    if args.devices and args.devices > 1:
+        # must happen before anything touches jax devices in this process
+        from repro.launch.mesh import ensure_virtual_cpu_devices
+        ensure_virtual_cpu_devices(args.devices)
 
     from ._jax_cache import enable_jax_compilation_cache
     cache = enable_jax_compilation_cache(args.jax_cache)
@@ -295,7 +370,8 @@ def main(argv=None):
         print(f"[jax] persistent compilation cache at {cache} "
               f"({'warm' if warm else 'cold'})")
     bench_repeated(k=args.k, quick=args.quick, large=args.large,
-                   out_path=args.out, jax_cache=cache, jax_cache_warm=warm)
+                   out_path=args.out, jax_cache=cache, jax_cache_warm=warm,
+                   devices=args.devices)
     return 0
 
 

@@ -7,7 +7,11 @@ Public API:
     analyze / factor / refactor / solve / solve_system
     factor_batched / solve_batched / solve_sequence
                               batched repeated-solve path: K value sets of
-                              one pattern factored+solved as one XLA program
+                              one pattern factored+solved as one XLA
+                              program — sharded over devices via
+                              HyluOptions.mesh, with solve_sequence's
+                              async double-buffered T-step pipeline
+                              (HyluOptions.donate recycles buffers)
     jax_repeated_engine       pre-compiled per-analysis jax engine bundle
     make_sparse_solve         differentiable jittable solver (custom_vjp)
     baselines                 pardiso_like / klu_like option presets

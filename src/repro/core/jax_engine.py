@@ -19,6 +19,7 @@ diagonal block (supernode diagonal pivoting + pivot perturbation).
 """
 from __future__ import annotations
 
+import warnings
 from typing import NamedTuple
 
 import jax
@@ -26,6 +27,21 @@ import jax.numpy as jnp
 import numpy as np
 
 from .plan import FactorPlan
+
+
+def _jit_donating(fn, donate_argnums):
+    """jax.jit with donate_argnums, silencing the 'donated buffers were not
+    usable' warning: the A-values buffer intentionally has no same-shaped
+    output to alias — its donation is an early-free hint, not a bug."""
+    jitted = jax.jit(fn, donate_argnums=donate_argnums)
+
+    def call(*args):
+        with warnings.catch_warnings():
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+            return jitted(*args)
+
+    return call
 
 
 class JaxFactors(NamedTuple):
@@ -606,6 +622,13 @@ class RepeatedSolveEngine:
 
       refactor(a_data)                 -> JaxFactors        (one value set)
       refactor_batched(a_batch)        -> JaxFactors, vmapped over K sets
+                                              (shard_mapped over the mesh's
+                                              system-batch axis when the
+                                              engine was built with one)
+      refactor_batched_reuse(prev, a)  -> same, donating the previous step's
+                                              JaxFactors buffers so a
+                                              refactor *stream* reuses its
+                                              allocations instead of growing
       apply(vals, inode_perm, b)       -> x   solving A x = b with the stored
                                               factors (scales + permutations
                                               + LU substitution fused)
@@ -614,7 +637,9 @@ class RepeatedSolveEngine:
                                               batched tri-solve (scatter-add
                                               levels + scanned narrow tail,
                                               or the Pallas-TRSM node-block
-                                              path when ``use_pallas=True``)
+                                              path when ``use_pallas=True``);
+                                              always single-device (it is the
+                                              host-loop oracle path)
       refined_batched_solver(ip, ix)   -> the *fused* batched solve:
                                               substitution + device CSR
                                               residual matvec + the whole
@@ -626,13 +651,22 @@ class RepeatedSolveEngine:
     All index maps (scatter/gather, permutations, level schedules) are
     compile-time constants; only values flow through the program, so one
     compilation serves thousands of Newton/time/Monte-Carlo steps.
+
+    Sharding (``mesh`` not None): the batched programs are wrapped in
+    ``shard_map`` over the mesh's single axis — each device runs the
+    *identical* per-system program on its K/D shard of the batch, and no
+    collective touches the numerics (only the refinement iteration count is
+    ``pmax``-reduced for reporting), so sharded results are bit-identical
+    to the single-device path.  Callers pad K to a multiple of the device
+    count (api.factor_batched does this; padded systems ride the same
+    per-system ``alive`` masking the refinement loop already carries).
     """
 
     def __init__(self, plan: FactorPlan, ss, *, src_map, scale_map, p, q,
                  row_scale, col_scale, perturb_eps: float = 1e-8,
                  dtype=jnp.float64, use_pallas: bool = False,
                  interpret: bool = True, schedule: str = "bucketed",
-                 bulk_min_width: int = 8):
+                 bulk_min_width: int = 8, mesh=None):
         if np.dtype(dtype) == np.float64 and not jax.config.jax_enable_x64:
             # without this, float64 silently degrades to float32 and every
             # solve limps through refinement at ~1e-6 residuals
@@ -677,14 +711,47 @@ class RepeatedSolveEngine:
             return y * (s_[:, None] if multi else s_)
 
         self._apply_batched_impl = _apply_batched
+        self.mesh = mesh
+        self.batch_axis = mesh.axis_names[0] if mesh is not None else None
+        self.n_shards = int(mesh.size) if mesh is not None else 1
+        refactor_b = jax.vmap(_refactor)
+        if mesh is not None:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import NamedSharding, PartitionSpec
+
+            spec = PartitionSpec(self.batch_axis)
+            #: the sharding batched inputs should be staged with (device_put
+            #: here = no resharding inside the jitted calls)
+            self.batch_sharding = NamedSharding(mesh, spec)
+            # check_rep=False: the factor/while-loop primitives have no
+            # replication rule on this jax version; nothing here is
+            # replicated anyway (every output is batch-sharded)
+            refactor_b = shard_map(
+                refactor_b, mesh=mesh, in_specs=(spec,),
+                out_specs=JaxFactors(vals=spec, inode_perm=spec,
+                                     n_perturb=spec),
+                check_rep=False)
+        else:
+            self.batch_sharding = None
+        self._refactor_batched_impl = refactor_b
+
+        def _refactor_reuse(prev_vals, prev_inode, a_batch):
+            # numerically identical to refactor_batched; the prev buffers
+            # exist only to be donated, so the output JaxFactors alias them
+            # (n_perturb is tiny and stays live for reporting — not donated)
+            del prev_vals, prev_inode
+            return refactor_b(a_batch)
+
         self.refactor = jax.jit(_refactor)
-        self.refactor_batched = jax.jit(jax.vmap(_refactor))
+        self.refactor_batched = jax.jit(refactor_b)
+        self.refactor_batched_reuse = _jit_donating(_refactor_reuse,
+                                                    donate_argnums=(0, 1))
         self.apply = jax.jit(_apply)
         self.apply_batched = jax.jit(_apply_batched)
         self.lut_solve = jax.jit(lut_solve)
         self._refined_cache: dict = {}
 
-    def refined_batched_solver(self, indptr, indices):
+    def refined_batched_solver(self, indptr, indices, donate: bool = False):
         """The fused batched solve for K systems sharing the given original-A
         pattern (compile-time constants).  Returns a jitted
 
@@ -701,10 +768,19 @@ class RepeatedSolveEngine:
         A system (or RHS column) stops refining once its residual is at or
         below ``tol`` or an iteration fails to improve it — the same
         acceptance rule as the scalar host path.  ``max_iter=0`` disables
-        refinement (refine=False)."""
+        refinement (refine=False).
+
+        With an engine mesh, the program is shard_mapped over the batch
+        axis: each device runs its own refinement loop on its shard (the
+        per-system masking makes per-shard loop lengths invisible in x),
+        and ``n_iter`` is the pmax across shards.  ``donate=True`` builds a
+        variant that donates the A-values and RHS buffers — the
+        sequence-pipeline mode where each step's inputs die with the step
+        (factor buffers are recycled separately via
+        ``refactor_batched_reuse``); the state passed in is consumed."""
         indptr = np.asarray(indptr)
         indices = np.asarray(indices)
-        key = (indptr.tobytes(), indices.tobytes())
+        key = (indptr.tobytes(), indices.tobytes(), bool(donate))
         solver = self._refined_cache.get(key)
         if solver is not None:
             return solver
@@ -712,6 +788,7 @@ class RepeatedSolveEngine:
         matvec = make_csr_matvec_batched(indptr, indices)
         apply_b = self._apply_batched_impl
         dtype = self.dtype
+        batch_axis = self.batch_axis
 
         def solve_refined(vals, inode_perm, a_vals, b, max_iter, tol):
             multi = b.ndim == 3
@@ -758,8 +835,29 @@ class RepeatedSolveEngine:
 
             x, r, resid, alive, n_ref, it = jax.lax.while_loop(
                 cond, body, (x, r, resid, alive, n_ref, jnp.int32(0)))
-            return x, resid, jnp.maximum(it - 1, 0), n_ref
+            n_iter = jnp.maximum(it - 1, 0)
+            if batch_axis is not None:
+                # per-shard loops stop independently; report the global
+                # iteration count (the only cross-device op in the engine,
+                # and it never feeds back into x)
+                n_iter = jax.lax.pmax(n_iter, batch_axis)
+            return x, resid, n_iter, n_ref
 
-        solver = jax.jit(solve_refined)
+        fn = solve_refined
+        if self.mesh is not None:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec
+
+            spec = PartitionSpec(batch_axis)
+            rep = PartitionSpec()
+            # check_rep=False: lax.while_loop has no replication rule on
+            # this jax version; n_iter is the one P() output and the pmax
+            # above makes it genuinely replicated
+            fn = shard_map(fn, mesh=self.mesh,
+                           in_specs=(spec, spec, spec, spec, rep, rep),
+                           out_specs=(spec, spec, rep, spec),
+                           check_rep=False)
+        solver = (_jit_donating(fn, donate_argnums=(2, 3)) if donate
+                  else jax.jit(fn))
         self._refined_cache[key] = solver
         return solver

@@ -2,10 +2,26 @@
 
 A function, not a module-level constant: importing this module must never
 touch jax device state (smoke tests see 1 device; only dryrun.py forces 512).
+
+Two families live here:
+
+* the training/dryrun meshes (``make_production_mesh`` / ``make_host_mesh``),
+  kept from the transformer substrate;
+* the solver's 1-D **system-batch mesh** (``make_solver_mesh``) that the
+  batched repeated-solve engine shards over — the K independent systems of
+  ``factor_batched`` / ``solve_batched`` / ``solve_sequence`` are
+  embarrassingly parallel, so a single data axis is the whole story — plus
+  the virtual-CPU-device harness (``ensure_virtual_cpu_devices``) that lets
+  tests and CI exercise multi-device sharding on one host.
 """
 from __future__ import annotations
 
+import os
+
 import jax
+
+#: mesh axis name the batched solver shards the system-batch dimension over
+BATCH_AXIS = "systems"
 
 
 def compat_make_mesh(shape, axes):
@@ -31,3 +47,55 @@ def make_host_mesh(model: int = 1):
     n = len(jax.devices())
     data = n // model
     return compat_make_mesh((data, model), ("data", "model"))
+
+
+def make_solver_mesh(n_devices: int | None = None, axis: str = BATCH_AXIS):
+    """1-D mesh over the system-batch axis of the batched solver.
+
+    ``n_devices=None`` takes every visible device; an int takes the first
+    ``n_devices`` (so a sweep over device counts on one host is just
+    ``make_solver_mesh(1), make_solver_mesh(2), ...``).  The returned mesh
+    is what ``HyluOptions.mesh`` accepts directly — passing an int there
+    routes through this helper."""
+    import numpy as np
+
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else int(n_devices)
+    if not 1 <= n <= len(devs):
+        raise ValueError(
+            f"make_solver_mesh: asked for {n} devices but "
+            f"{len(devs)} are visible — on CPU, force virtual devices with "
+            "launch.mesh.ensure_virtual_cpu_devices(n) (or XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n}) before jax "
+            "initializes its backend")
+    return jax.sharding.Mesh(np.asarray(devs[:n]), (axis,))
+
+
+def ensure_virtual_cpu_devices(n: int) -> int:
+    """Force ≥ ``n`` virtual CPU devices (the multi-device test/CI harness).
+
+    XLA reads ``--xla_force_host_platform_device_count`` exactly once, when
+    the CPU backend initializes — so this must run before anything touches
+    ``jax.devices()`` / puts an array on device.  Returns the resulting
+    device count; raises if the backend already initialized with fewer
+    devices than requested (the caller should set ``XLA_FLAGS`` in the
+    environment, or run in a subprocess — see tests/test_sharding.py)."""
+    n = int(n)
+    try:
+        from jax._src import xla_bridge as _xb
+        initialized = bool(getattr(_xb, "_backends", None))
+    except Exception:                        # private API moved: probe hard
+        initialized = True
+    if not initialized:
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "--xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                flags + f" --xla_force_host_platform_device_count={n}"
+            ).strip()
+    have = len(jax.devices())
+    if have < n:
+        raise RuntimeError(
+            f"need {n} devices but jax initialized with {have}; set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n} before "
+            "importing/using jax (e.g. in a fresh subprocess)")
+    return have

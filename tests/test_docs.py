@@ -1,0 +1,22 @@
+"""Docs stay true: the docs-lint checks run as part of the suite, so a
+broken internal link, an undocumented HyluOptions field, or an unlinked
+core doc fails tier-1 — not just the dedicated CI step."""
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_docs_lint_passes():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, os.path.join(REPO, "tools",
+                                                     "docs_lint.py")],
+                       capture_output=True, text=True, env=env, cwd=REPO)
+    assert r.returncode == 0, r.stderr
+
+
+def test_core_docs_exist():
+    for rel in ("docs/ARCHITECTURE.md", "docs/API.md", "docs/BENCHMARKS.md"):
+        assert os.path.exists(os.path.join(REPO, rel)), rel

@@ -1,0 +1,277 @@
+"""Sharded batched-engine parity suite (the degenerate and real sharding
+paths of PR 4's multi-device repeated-solve engine).
+
+The sharded programs must be *bit-identical* (asserted to 1e-10, observed
+0.0) to the single-device path: shard_map gives every device the identical
+per-system program on its K/D shard and no collective touches the
+numerics.  Covered here:
+
+* 1-device mesh ≡ unsharded (the shard_map wrapper itself is a no-op);
+* K not divisible by the device count (pad with system 0 + mask, slice
+  back);
+* committed device buffers in, and the donating sequence pipeline;
+* a real 2/4-virtual-device CPU run via the
+  ``XLA_FLAGS=--xla_force_host_platform_device_count`` harness, in a
+  subprocess (the flag is read once at backend init, so the multi-device
+  cases cannot run inside the already-initialized test process).
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import CSR, HyluOptions, analyze
+from repro.core.api import (factor_batched, solve_batched, solve_sequence,
+                            _solve_batched_hostloop)
+
+from tests.helpers import scenario_system
+
+K = 5            # deliberately not divisible by any multi-device count
+N = 36
+SCENARIOS_RUN = ["circuit", "banded"]
+
+
+def _case(scenario, k=K, seed=3):
+    Ac, _, _, _ = scenario_system(scenario, n=N, seed=seed)
+    rng = np.random.default_rng(seed + 10)
+    vb = Ac.data[None, :] * rng.uniform(0.9, 1.1, (k, Ac.nnz))
+    bb = rng.normal(size=(k, Ac.n))
+    return Ac, vb, bb
+
+
+def _solve(Ac, vb, bb, opts):
+    an = analyze(Ac, opts)
+    bst = factor_batched(an, Ac, vb)
+    x, info = solve_batched(bst, bb)
+    return x, info, bst
+
+
+@pytest.mark.parametrize("scenario", SCENARIOS_RUN)
+def test_one_device_mesh_equals_unsharded(scenario):
+    """mesh=1 routes through shard_map + padding machinery but must equal
+    the plain vmapped path to 1e-10 (it is in fact bit-identical)."""
+    Ac, vb, bb = _case(scenario)
+    x0, info0, _ = _solve(Ac, vb, bb, HyluOptions())
+    x1, info1, bst1 = _solve(Ac, vb, bb, HyluOptions(mesh=1))
+    assert bst1.k == K and bst1.k_pad == K        # 1 device: no padding
+    np.testing.assert_allclose(x1, x0, rtol=0, atol=1e-10)
+    np.testing.assert_allclose(info1["residual"], info0["residual"],
+                               rtol=0, atol=1e-10)
+    np.testing.assert_array_equal(info1["n_refine_per_system"],
+                                  info0["n_refine_per_system"])
+
+
+def test_one_device_mesh_multirhs_and_hostloop_oracle():
+    Ac, vb, _ = _case("circuit")
+    rng = np.random.default_rng(0)
+    bm = rng.normal(size=(K, Ac.n, 3))
+    x0, _, _ = _solve(Ac, vb, bm, HyluOptions())
+    x1, info1, bst1 = _solve(Ac, vb, bm, HyluOptions(mesh=1))
+    assert x1.shape == (K, Ac.n, 3)
+    np.testing.assert_allclose(x1, x0, rtol=0, atol=1e-10)
+    # the host-loop oracle slices mesh padding off and must agree too
+    xh, _ = _solve_batched_hostloop(bst1, bm)
+    np.testing.assert_allclose(xh, x1, rtol=0, atol=1e-10)
+
+
+def test_device_buffer_input_no_reupload():
+    """Committed jax arrays are used in place (the H2D-fix satellite):
+    values_dev must BE the staged input buffer, and the lazily
+    materialized host oracle must round-trip exactly."""
+    import jax.numpy as jnp
+
+    Ac, vb, bb = _case("circuit")
+    an = analyze(Ac, HyluOptions())
+    vdev = jnp.asarray(vb)
+    bst = factor_batched(an, Ac, vdev)
+    assert bst.values_dev is vdev                 # no copy, no round-trip
+    assert bst._values_host is None               # oracle not materialized
+    x, _ = solve_batched(bst, bb)
+    x0, _ = solve_batched(factor_batched(an, Ac, vb), bb)
+    np.testing.assert_allclose(x, x0, rtol=0, atol=1e-10)
+    np.testing.assert_allclose(bst.values_batch, vb, rtol=0, atol=0)
+
+
+def test_donating_solve_consumes_state():
+    Ac, vb, bb = _case("circuit")
+    an = analyze(Ac, HyluOptions())
+    x0, _ = solve_batched(factor_batched(an, Ac, vb), bb)
+    bst = factor_batched(an, Ac, vb)
+    xd, _ = solve_batched(bst, bb, donate=True)
+    np.testing.assert_allclose(xd, x0, rtol=0, atol=1e-10)
+    assert bst.consumed
+    with pytest.raises(RuntimeError, match="consumed"):
+        solve_batched(bst, bb)
+
+
+@pytest.mark.parametrize("donate", [False, True])
+def test_sequence_pipeline_matches_per_step_solves(donate):
+    """The async double-buffered T-step pipeline (with and without buffer
+    donation) must match T independent factor_batched+solve_batched calls."""
+    Ac, vb, bb = _case("circuit")
+    rng = np.random.default_rng(5)
+    steps = [Ac.data[None, :] * rng.uniform(0.9, 1.1, (K, Ac.nnz))
+             for _ in range(4)]
+    xs, info = solve_sequence(Ac, steps, bb, HyluOptions(donate=donate))
+    assert xs.shape == (4, K, Ac.n)
+    assert info["steps"] == 4 and info["k"] == K
+    an = analyze(Ac, HyluOptions())
+    for t, vt in enumerate(steps):
+        xt, it = solve_batched(factor_batched(an, Ac, vt), bb)
+        np.testing.assert_allclose(xs[t], xt, rtol=0, atol=1e-10)
+        np.testing.assert_allclose(info["residual"][t], it["residual"],
+                                   rtol=0, atol=1e-10)
+
+
+def test_sequence_per_step_rhs_and_stacked_values():
+    Ac, vb, bb = _case("circuit")
+    rng = np.random.default_rng(6)
+    steps = np.stack([Ac.data[None, :] * rng.uniform(0.9, 1.1, (K, Ac.nnz))
+                      for _ in range(3)])            # (T, K, nnz) stacked
+    bs = [rng.normal(size=(K, Ac.n)) for _ in range(3)]
+    xs, info = solve_sequence(Ac, steps, bs)
+    an = analyze(Ac, HyluOptions())
+    for t in range(3):
+        xt, _ = solve_batched(factor_batched(an, Ac, steps[t]), bs[t])
+        np.testing.assert_allclose(xs[t], xt, rtol=0, atol=1e-10)
+    with pytest.raises(ValueError, match="per-step right-hand sides"):
+        solve_sequence(Ac, steps, bs[:2])
+
+
+def test_sequence_donate_shared_committed_rhs():
+    """A committed jax RHS shared across steps must survive donation: the
+    pipeline restages a fresh copy per step instead of dispatching the
+    step-0-donated buffer again (regression: 'array has been deleted')."""
+    import jax.numpy as jnp
+
+    Ac, vb, bb = _case("circuit")
+    rng = np.random.default_rng(8)
+    steps = [Ac.data[None, :] * rng.uniform(0.9, 1.1, (K, Ac.nnz))
+             for _ in range(3)]
+    b_dev = jnp.asarray(bb)
+    xs, _ = solve_sequence(Ac, steps, b_dev, HyluOptions(donate=True))
+    xs0, _ = solve_sequence(Ac, steps, bb, HyluOptions())
+    np.testing.assert_allclose(xs, xs0, rtol=0, atol=1e-10)
+    np.testing.assert_allclose(np.asarray(b_dev), bb)  # caller's b intact
+
+
+def test_wrong_batch_size_rhs_raises():
+    """A mis-sized RHS batch must raise, not silently zero-pad."""
+    Ac, vb, bb = _case("circuit")
+    an = analyze(Ac, HyluOptions())
+    bst = factor_batched(an, Ac, vb)
+    with pytest.raises(ValueError, match="batch size"):
+        solve_batched(bst, bb[: K - 2])
+
+
+def test_list_of_1d_value_sets_is_one_batched_step():
+    """Historical semantics: a list of (nnz,) vectors is ONE K-batch, not
+    a K-step sequence of 1-system batches."""
+    Ac, vb, bb = _case("circuit")
+    x_list, info = solve_sequence(Ac, [vb[i] for i in range(K)], bb)
+    assert x_list.shape == (K, Ac.n)
+    x_arr, _ = solve_sequence(Ac, vb, bb)
+    np.testing.assert_allclose(x_list, x_arr, rtol=0, atol=1e-10)
+
+
+def test_mesh_option_validation():
+    Ac, vb, bb = _case("circuit")
+    with pytest.raises(TypeError, match="mesh must be"):
+        _solve(Ac, vb, bb, HyluOptions(mesh="four"))
+    import jax
+
+    if len(jax.devices()) == 1:
+        with pytest.raises(ValueError, match="devices are visible|visible"):
+            _solve(Ac, vb, bb, HyluOptions(mesh=2))
+
+
+# --------------------------------------------------------------------------
+# real multi-device runs: a subprocess sets
+# --xla_force_host_platform_device_count before jax initializes
+# --------------------------------------------------------------------------
+_MULTI_DEVICE_CODE = """
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=4")
+import numpy as np
+import jax
+jax.config.update("jax_enable_x64", True)
+import sys
+sys.path.insert(0, "tests")
+from helpers import scenario_system
+from repro.core import HyluOptions, analyze
+from repro.core.api import factor_batched, solve_batched, solve_sequence
+from repro.launch.mesh import ensure_virtual_cpu_devices, make_solver_mesh
+
+assert ensure_virtual_cpu_devices(4) >= 4
+
+for scenario in {scenarios!r}:
+    Ac, _, _, _ = scenario_system(scenario, n=36, seed=3)
+    rng = np.random.default_rng(13)
+    vb = Ac.data[None, :] * rng.uniform(0.9, 1.1, (5, Ac.nnz))   # K=5
+    bb = rng.normal(size=(5, Ac.n))
+    an0 = analyze(Ac, HyluOptions())
+    x0, info0 = solve_batched(factor_batched(an0, Ac, vb), bb)
+    for nd in (2, 4):                         # K=5 divides neither: pad+mask
+        for mesh in (nd, make_solver_mesh(nd)):   # int and explicit Mesh
+            an = analyze(Ac, HyluOptions(mesh=mesh))
+            bst = factor_batched(an, Ac, vb)
+            assert bst.k == 5 and bst.k_pad % nd == 0 and bst.k_pad >= 5
+            x, info = solve_batched(bst, bb)
+            assert np.abs(x - x0).max() <= 1e-10, (scenario, nd)
+            assert np.abs(info["residual"] - info0["residual"]).max() <= 1e-10
+            assert x.shape == x0.shape
+    # donating sequence pipeline on 2 devices
+    steps = [Ac.data[None, :] * rng.uniform(0.9, 1.1, (5, Ac.nnz))
+             for _ in range(3)]
+    xs, _ = solve_sequence(Ac, steps, bb, HyluOptions(mesh=2, donate=True))
+    xs0, _ = solve_sequence(Ac, steps, bb, HyluOptions())
+    assert np.abs(xs - xs0).max() <= 1e-10, scenario
+print("MULTI_DEVICE_PARITY_OK")
+"""
+
+
+def _run_multi_device(scenarios):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-c",
+         _MULTI_DEVICE_CODE.format(scenarios=scenarios)],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert "MULTI_DEVICE_PARITY_OK" in r.stdout, (r.stdout[-2000:],
+                                                  r.stderr[-4000:])
+
+
+def test_multi_device_parity_subprocess():
+    """2- and 4-virtual-device sharding ≡ single device, K=5 non-divisible,
+    int and Mesh options, donating pipeline — in a fresh process so the
+    device-count flag can take effect."""
+    if len(__import__("jax").devices()) >= 4:
+        pytest.skip("already multi-device in-process; covered by "
+                    "test_multi_device_parity_inprocess")
+    _run_multi_device(SCENARIOS_RUN)
+
+
+def test_multi_device_parity_inprocess():
+    """The same parity matrix run directly when the process already has ≥2
+    devices — this is the path the CI multi-device job exercises (it sets
+    XLA_FLAGS before pytest starts)."""
+    import jax
+
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >=2 devices (CI multi-device job sets "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+    nds = [d for d in (2, 4) if len(jax.devices()) >= d]
+    for scenario in SCENARIOS_RUN:
+        Ac, vb, bb = _case(scenario)
+        x0, info0, _ = _solve(Ac, vb, bb, HyluOptions())
+        for nd in nds:
+            x, info, bst = _solve(Ac, vb, bb, HyluOptions(mesh=nd))
+            assert bst.k_pad % nd == 0
+            np.testing.assert_allclose(x, x0, rtol=0, atol=1e-10)
+            np.testing.assert_allclose(info["residual"], info0["residual"],
+                                       rtol=0, atol=1e-10)

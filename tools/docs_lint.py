@@ -1,0 +1,99 @@
+"""Docs lint (the CI docs step; also run by tests/test_docs.py).
+
+Checks, repo-relative:
+  1. every internal markdown link in docs/*.md, README.md and ROADMAP.md
+     resolves — the file exists, and when the link carries a #fragment the
+     target heading exists (GitHub-style slugs);
+  2. every ``HyluOptions`` field is documented in docs/API.md (the options
+     table must not rot as knobs are added);
+  3. the three core docs exist and are linked from README.md.
+
+    PYTHONPATH=src python tools/docs_lint.py
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOC_FILES = ("README.md", "ROADMAP.md", "docs/ARCHITECTURE.md",
+             "docs/API.md", "docs/BENCHMARKS.md")
+CORE_DOCS = ("docs/ARCHITECTURE.md", "docs/API.md", "docs/BENCHMARKS.md")
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.M)
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style anchor slug of a markdown heading."""
+    h = re.sub(r"[`*_]", "", heading.strip().lower())
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def _anchors(path: str) -> set:
+    with open(path, encoding="utf-8") as f:
+        return {_slug(m.group(1)) for m in _HEADING.finditer(f.read())}
+
+
+def check_links() -> list:
+    errors = []
+    for rel in DOC_FILES:
+        path = os.path.join(REPO, rel)
+        if not os.path.exists(path):
+            errors.append(f"{rel}: file missing")
+            continue
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        for target in _LINK.findall(text):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            frag = None
+            if "#" in target:
+                target, frag = target.split("#", 1)
+            tpath = (path if not target
+                     else os.path.normpath(
+                         os.path.join(os.path.dirname(path), target)))
+            if not os.path.exists(tpath):
+                errors.append(f"{rel}: broken link -> {target}")
+                continue
+            if frag and tpath.endswith(".md"):
+                if _slug(frag) not in _anchors(tpath):
+                    errors.append(f"{rel}: broken anchor -> "
+                                  f"{target or rel}#{frag}")
+    return errors
+
+
+def check_options_documented() -> list:
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    from repro.core.api import HyluOptions
+
+    with open(os.path.join(REPO, "docs/API.md"), encoding="utf-8") as f:
+        text = f.read()
+    return [f"docs/API.md: HyluOptions field `{f.name}` undocumented"
+            for f in dataclasses.fields(HyluOptions)
+            if f"`{f.name}`" not in text]
+
+
+def check_readme_links_docs() -> list:
+    with open(os.path.join(REPO, "README.md"), encoding="utf-8") as f:
+        text = f.read()
+    return [f"README.md: does not link {d}" for d in CORE_DOCS
+            if os.path.basename(d) not in text]
+
+
+def main() -> int:
+    errors = check_links() + check_options_documented() \
+        + check_readme_links_docs()
+    for e in errors:
+        print(f"docs-lint: {e}", file=sys.stderr)
+    if not errors:
+        n = len(DOC_FILES)
+        print(f"docs-lint: OK ({n} files, all links + HyluOptions fields)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -24,6 +24,13 @@ points the persistent JAX compilation cache somewhere (default
 recorded compile numbers are only *cold* numbers with a fresh/disabled
 cache).
 
+The ``analyze`` section records the host preprocessing phase per matrix
+(matching/ordering/symbolic/plan breakdown) plus plan-cache cold vs warm
+timings (in-memory hit and disk-artifact load — what a fresh process pays
+instead of re-analyzing), and the ``serving`` section measures an
+interleaved circuit/banded/unsym mixed-pattern request stream through
+``SolverService`` (cold analyze+compile vs warm cache hits, req/s).
+
 ``--devices N`` adds the multi-device sweep: the batched refactor+solve
 on a 1-D solver mesh over 1, 2, …, N (virtual CPU) devices
 (``HyluOptions(mesh=d)``), recorded as the ``devices_sweep`` section —
@@ -41,6 +48,8 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import tempfile
 import time
 
 import jax
@@ -183,6 +192,136 @@ def bench_matrix(name, Ac, k):
     return rec
 
 
+def bench_analyze_matrix(name, Ac, cache_root=None):
+    """Analyze-phase benchmark for one matrix: the host preprocessing
+    breakdown (matching / ordering / symbolic / plan) plus plan-cache
+    timings — cold (analyze + persist), warm in-memory hit, and warm disk
+    hit from a fresh cache over the same ``checkpoints/``-style artifact
+    store (a fresh process pays only this load instead of the analyze).
+
+    cache_root: directory for the throwaway artifact store; None creates
+    (and removes) a fresh temp dir."""
+    import shutil
+
+    from repro.core import HyluOptions
+    from repro.core.plan_cache import PlanCache
+
+    own_root = cache_root is None
+    if own_root:
+        cache_root = tempfile.mkdtemp(prefix="hylu_bench_plan_cache_")
+    d = os.path.join(cache_root, name)
+    shutil.rmtree(d, ignore_errors=True)
+    opts = HyluOptions()
+    cache = PlanCache(directory=d)
+
+    t0 = time.perf_counter()
+    an = cache.get_or_analyze(Ac, opts)          # cold: analyze + save
+    cold_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    cache.get_or_analyze(Ac, opts)               # warm: in-memory hit
+    warm_mem_s = time.perf_counter() - t0
+    fresh = PlanCache(directory=d)
+    t0 = time.perf_counter()
+    an2 = fresh.get_or_analyze(Ac, opts)         # warm: disk artifact load
+    warm_disk_s = time.perf_counter() - t0
+    assert fresh.stats["disk_hits"] == 1 and fresh.stats["analyze_calls"] == 0
+    rec = dict(
+        n=Ac.n, nnz=Ac.nnz, mode=an.choice.mode,
+        analyze_s=dict(
+            matching=an.timings["matching"], ordering=an.timings["ordering"],
+            symbolic=an.timings["symbolic"], plan=an.timings["plan"],
+            total=an.timings["total"]),
+        plan_cache=dict(cold_s=cold_s, warm_mem_s=warm_mem_s,
+                        warm_disk_s=warm_disk_s,
+                        artifact_bytes=os.path.getsize(fresh.path_for(
+                            an2.fingerprint)),
+                        speedup_warm_disk=an.timings["total"] / warm_disk_s),
+    )
+    print(f"[analyze]  {name:14s} n={Ac.n:5d} "
+          f"analyze={an.timings['total']*1e3:7.1f}ms "
+          f"(match={an.timings['matching']*1e3:6.1f} "
+          f"order={an.timings['ordering']*1e3:6.1f} "
+          f"sym={an.timings['symbolic']*1e3:6.1f} "
+          f"plan={an.timings['plan']*1e3:6.1f}) "
+          f"cache cold={cold_s*1e3:7.1f}ms mem={warm_mem_s*1e6:5.0f}us "
+          f"disk={warm_disk_s*1e3:6.1f}ms "
+          f"({rec['plan_cache']['speedup_warm_disk']:.1f}x vs analyze)",
+          flush=True)
+    if own_root:
+        shutil.rmtree(cache_root, ignore_errors=True)
+    return rec
+
+
+def bench_serving(k_per_pattern=8, reps=2, batch_size=8, cache_root=None):
+    """Mixed-pattern serving throughput: an interleaved stream of circuit /
+    banded / unsym requests (distinct sparsity patterns, per-request value
+    drift) through ``SolverService`` — cold (analyze + compile on first
+    touch of each pattern) vs warm (every plan and engine cached).
+
+    cache_root: directory to put the run's throwaway plan-cache store
+    under; None creates (and owns) a fresh temp dir."""
+    import shutil
+
+    from repro.serve.solver_service import SolverService, SolveRequest
+
+    own_root = cache_root is None
+    if own_root:
+        cache_root = tempfile.mkdtemp(prefix="hylu_bench_serving_")
+    d = os.path.join(cache_root, "serving")
+    shutil.rmtree(d, ignore_errors=True)
+    pats = [("circuit", CSR.from_scipy(matrices.circuit_like(200, 1)
+                                       .tocsr())),
+            ("banded", CSR.from_scipy(matrices.banded(150, 6, 2).tocsr())),
+            ("unsym", CSR.from_scipy(matrices.unsym_random(120, 0.02, 8)
+                                     .tocsr()))]
+
+    def stream(seed):
+        rng = np.random.default_rng(seed)
+        reqs = []
+        for rep in range(reps):
+            for _ in range(k_per_pattern):
+                for name, Ac in pats:
+                    reqs.append(SolveRequest(
+                        a=CSR(Ac.n, Ac.indptr, Ac.indices,
+                              Ac.data * rng.uniform(0.9, 1.1, Ac.nnz)),
+                        b=rng.normal(size=Ac.n), tag=name))
+        rng.shuffle(reqs)                       # genuinely interleaved
+        return reqs
+
+    svc = SolverService(cache_dir=d, batch_size=batch_size)
+    reqs = stream(1)
+    t0 = time.perf_counter()
+    res = svc.solve_batch(reqs)
+    cold_s = time.perf_counter() - t0
+    worst = max(float(np.max(r.residual)) for r in res)
+    assert worst < 1e-8, worst
+    reqs2 = stream(2)
+    t0 = time.perf_counter()
+    svc.solve_batch(reqs2)
+    warm_s = time.perf_counter() - t0
+    rec = dict(
+        n_requests=len(reqs), n_patterns=len(pats),
+        batch_size=batch_size,
+        patterns={name: dict(n=Ac.n, nnz=Ac.nnz) for name, Ac in pats},
+        modes=sorted(svc.pattern_modes.values()),
+        cold_s=cold_s, warm_s=warm_s,
+        cold_req_per_s=len(reqs) / cold_s,
+        warm_req_per_s=len(reqs2) / warm_s,
+        worst_residual=worst,
+        dispatches=svc.stats["dispatches"],
+        padded_systems=svc.stats["padded_systems"],
+        plan_cache=dict(svc.cache.stats),
+    )
+    print(f"[serving]  {len(reqs)} mixed requests over {len(pats)} patterns "
+          f"(batch={batch_size}): cold={cold_s:5.1f}s "
+          f"({rec['cold_req_per_s']:6.1f} req/s) "
+          f"warm={warm_s:5.2f}s ({rec['warm_req_per_s']:7.1f} req/s) "
+          f"worst_resid={worst:.1e}", flush=True)
+    if own_root:
+        shutil.rmtree(cache_root, ignore_errors=True)
+    return rec
+
+
 def suite(quick=False, large=False):
     if quick:
         return [("circuit_150", CSR.from_scipy(matrices.circuit_like(150, 1)
@@ -268,10 +407,12 @@ def compile_table(records) -> str:
 
 def bench_repeated(k=32, quick=False, large=False,
                    out_path="BENCH_repeated.json", jax_cache=None,
-                   jax_cache_warm=False, devices=None):
+                   jax_cache_warm=False, devices=None, serving=True):
     records = {}
+    analyze_records = {}
     mats = suite(quick=quick, large=large)
     for name, Ac in mats:
+        analyze_records[name] = bench_analyze_matrix(name, Ac)
         t0 = time.time()
         records[name] = bench_matrix(name, Ac, k)
         r = records[name]
@@ -312,7 +453,13 @@ def bench_repeated(k=32, quick=False, large=False,
     # — only cold (jax_cache disabled/fresh) numbers are trajectory-grade
     out = dict(k=k, jax_compilation_cache=jax_cache or None,
                jax_cache_warm=bool(jax_cache_warm),
-               matrices=records, geomean_speedup_over_ref_loop=summary)
+               matrices=records, geomean_speedup_over_ref_loop=summary,
+               analyze=analyze_records)
+    if serving:
+        # mixed-pattern serving throughput (smaller request volume on
+        # --quick so the CI bench job still records the section)
+        out["serving"] = bench_serving(
+            k_per_pattern=2 if quick else 8, reps=1 if quick else 2)
     if devices and devices > 1:
         # multi-device sweep on the first suite matrix (throughput vs
         # device count; bit-exact parity is the test suite's job)
@@ -353,8 +500,9 @@ def main(argv=None):
                     help="also sweep the sharded batched path over "
                          "1..N (virtual CPU) devices -> devices_sweep "
                          "section of the JSON")
+    ap.add_argument("--no-serving", action="store_true",
+                    help="skip the mixed-pattern SolverService section")
     args = ap.parse_args(argv)
-    import os
 
     if args.devices and args.devices > 1:
         # must happen before anything touches jax devices in this process
@@ -371,7 +519,7 @@ def main(argv=None):
               f"({'warm' if warm else 'cold'})")
     bench_repeated(k=args.k, quick=args.quick, large=args.large,
                    out_path=args.out, jax_cache=cache, jax_cache_warm=warm,
-                   devices=args.devices)
+                   devices=args.devices, serving=not args.no_serving)
     return 0
 
 

@@ -1,7 +1,8 @@
 """repro.core — HYLU: hybrid parallel sparse LU factorization (the paper's
 contribution) as a composable JAX module.
 
-Public API:
+Public API (layered: options → analysis → batched → api facade, with the
+plan cache on top; serving lives in repro.serve.solver_service):
     CSR                       sparse container
     HyluOptions               solver options (mode/ordering/engine knobs)
     analyze / factor / refactor / solve / solve_system
@@ -13,6 +14,11 @@ Public API:
                               async double-buffered T-step pipeline
                               (HyluOptions.donate recycles buffers)
     jax_repeated_engine       pre-compiled per-analysis jax engine bundle
+    pattern_key / plan_fingerprint
+                              content address of an analysis artifact
+    PlanCache / save_analysis / load_analysis
+                              content-addressed LRU plan cache with disk
+                              persistence under checkpoints/plan_cache
     make_sparse_solve         differentiable jittable solver (custom_vjp)
     baselines                 pardiso_like / klu_like option presets
 """
@@ -20,6 +26,7 @@ from .matrix import CSR
 from .api import (HyluOptions, Analysis, FactorState, BatchedFactorState,
                   analyze, factor, refactor, solve, solve_system,
                   factor_batched, solve_batched, solve_sequence,
-                  jax_repeated_engine)
+                  jax_repeated_engine, pattern_key, plan_fingerprint)
+from .plan_cache import PlanCache, save_analysis, load_analysis
 from .autodiff import make_sparse_solve
 from . import baseline as baselines

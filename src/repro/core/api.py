@@ -1,4 +1,4 @@
-"""HYLU public API: analyze → factor → solve (+ refactor for repeated solve).
+"""HYLU public API facade: analyze → factor → solve (+ repeated/batched).
 
 Pipeline (paper §2):
   preprocessing   = MC64 matching/scaling + ordering selection + symbolic
@@ -6,786 +6,50 @@ Pipeline (paper §2):
   numeric         = hybrid-kernel factorization (ref_engine / jax_engine)
   solve           = level-scheduled substitution + iterative refinement
 
-Transformations bookkeeping:  with Dr=diag(r), Ds=diag(s) from matching,
-column permutation q (matched entry → diagonal), symmetric ordering p and
-the numeric in-node pivot permutation g↦inode_perm[g]:
+This module is a thin re-exporting facade over the layered core stack —
+every name that ever lived in the old ``api.py`` monolith keeps importing
+from here:
 
-    M = (P_p (Dr A Ds) Q_q P_pᵀ),     L U = M[inode_perm, :]
+  :mod:`repro.core.options`    HyluOptions, mesh resolution, and the
+                               pattern/plan fingerprints (the content
+                               address of the plan cache)
+  :mod:`repro.core.analysis`   Analysis/FactorState + the scalar
+                               analyze/factor/refactor/solve lifecycle and
+                               the per-analysis compiled-engine cache
+  :mod:`repro.core.batched`    BatchedFactorState + the batched/sharded
+                               repeated-solve path (factor_batched /
+                               solve_batched / solve_sequence pipelines)
 
-    A x = b   ⇒   w = U⁻¹ L⁻¹ ((r·b)[p][inode_perm]) ;  z[p]=w ; y[q]=z ; x = s·y
-
-The batched repeated-solve path (factor_batched / solve_batched /
-solve_sequence) lifts the numeric phase over K value sets of one pattern
-as single pre-compiled XLA programs, optionally sharded across devices
-over the system-batch axis (HyluOptions.mesh) with an async
-double-buffered, buffer-donating sequence pipeline (HyluOptions.donate).
-Full contracts: docs/API.md; architecture: docs/ARCHITECTURE.md.
+On top of these sit :mod:`repro.core.plan_cache` (content-addressed LRU
+cache + disk persistence of analyses under ``checkpoints/``) and
+:mod:`repro.serve.solver_service` (mixed-pattern serving: group-by-
+fingerprint dispatch onto the batched engines).  Full contracts:
+docs/API.md; architecture: docs/ARCHITECTURE.md.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-import numpy as np
-
-from .matrix import CSR
-from .matching import max_weight_matching, MatchResult
-from .ordering import select_ordering
-from .kernel_select import select_kernel, KernelChoice
-from .plan import build_plan, FactorPlan
-from .symbolic import Symbolic
-from . import ref_engine
-from .ref_engine import Factors, SolvePlan
-
-
-@dataclasses.dataclass
-class HyluOptions:
-    """Solver options — every knob of the analyze/factor/solve pipeline.
-    Field-by-field documentation lives in docs/API.md (kept in sync by the
-    docs-lint CI step)."""
-    force_mode: str | None = None          # rowrow | hybrid | supernodal
-    orderings: tuple = ("min_degree", "nested_dissection", "natural")
-    relax: int = 8
-    max_super: int = 128
-    perturb_eps: float = 1e-8
-    refine_max_iter: int = 3
-    refine_tol: float = 1e-12
-    bulk_min_width: int = 8
-    engine: str = "ref"                    # ref | jax — default numeric engine
-    use_pallas: bool = False               # route jax panel updates via Pallas
-    factor_schedule: str = "bucketed"      # bucketed (O(levels) trace) |
-                                           # unrolled (O(nodes+edges) oracle)
-    mesh: object = None                    # shard the batched path over the
-                                           # system-batch axis K: None (single
-                                           # device) | int (first N devices,
-                                           # launch.mesh.make_solver_mesh) |
-                                           # a 1-D jax.sharding.Mesh
-    donate: bool = False                   # sequence pipeline donates value/
-                                           # RHS/factor buffers step-to-step
-                                           # (consumed states; no realloc)
-
-
-@dataclasses.dataclass
-class Analysis:
-    """The reusable product of :func:`analyze` (HYLU §2.1): matching,
-    ordering, symbolic structure, the static FactorPlan, and the refactor
-    gather maps — everything value-independent about one sparsity pattern.
-    Also carries the per-pattern cache of compiled jax engines, so keep it
-    alive across refactor/solve streams."""
-    n: int
-    opts: HyluOptions
-    match: MatchResult
-    q: np.ndarray              # column permutation from matching
-    p: np.ndarray              # fill-reducing ordering
-    ordering_name: str
-    choice: KernelChoice
-    sym: Symbolic
-    plan: FactorPlan
-    # refactor fast path: M.data = A.data[src_map] * scale_map
-    src_map: np.ndarray
-    scale_map: np.ndarray
-    m_pattern: tuple           # (indptr, indices) of M
-    timings: dict
-    # jit cache keyed on this analysis' plan: (dtype name, use_pallas) →
-    # jax_engine.RepeatedSolveEngine (built lazily on first jax-engine use)
-    jit_cache: dict = dataclasses.field(default_factory=dict, repr=False)
-
-
-@dataclasses.dataclass
-class FactorState:
-    """One numeric factorization of one value set — what :func:`solve`
-    consumes and :func:`refactor` refreshes (ref engine: numpy factors +
-    solve plan; jax engine: device JaxFactors)."""
-    analysis: Analysis
-    factors: Factors | None
-    solve_plan: SolvePlan | None
-    a: CSR                     # the matrix these factors correspond to
-    timings: dict
-    engine: str = "ref"
-    jax_factors: object = None  # jax_engine.JaxFactors when engine == "jax"
-
-
-@dataclasses.dataclass
-class BatchedFactorState:
-    """K factorizations of one sparsity pattern (K value sets), held as
-    stacked device arrays — the state of the batched repeated-solve path.
-
-    Under a mesh (``HyluOptions.mesh``) the device arrays are padded from K
-    up to ``k_pad`` (a multiple of the device count) and sharded over the
-    mesh's system-batch axis; ``k`` is always the caller's true batch size
-    and every result is sliced back to it."""
-    analysis: Analysis
-    a_pattern: tuple           # (indptr, indices) of the original matrices
-    values_dev: object         # jax (K_pad, nnz) A values on device (fused
-                               # residuals — staged once, not per solve)
-    vals: object               # jax (K_pad, total_slots) factored panels
-    inode_perm: object         # jax (K_pad, n) in-node pivot permutations
-    n_perturb: np.ndarray      # (K,) perturbation counts
-    timings: dict
-    k: int                     # true batch size (≤ k_pad)
-    consumed: bool = False     # buffers donated away by solve_batched(
-                               # donate=True) — the state is spent
-    _values_host: np.ndarray | None = dataclasses.field(default=None,
-                                                        repr=False)
-
-    @property
-    def k_pad(self) -> int:
-        return int(self.vals.shape[0])
-
-    @property
-    def values_batch(self) -> np.ndarray:
-        """(K, nnz) host mirror of the A values — the oracle the host-loop
-        baseline and tests diff against.  Materialized lazily: when the
-        caller committed device buffers (no host copy ever existed), the
-        first access is one device→host transfer."""
-        if self._values_host is None:
-            self._values_host = np.asarray(self.values_dev)[:self.k]
-        return self._values_host
-
-
-def analyze(a: CSR, opts: HyluOptions | None = None, reuse=None) -> Analysis:
-    """Preprocessing phase (HYLU §2.1).
-
-    reuse: a prior Analysis of the *same matrix* — matching and ordering are
-    mode-independent and are reused (benchmarking different kernel modes
-    re-runs only symbolic + plan)."""
-    opts = opts or HyluOptions()
-    t: dict[str, float] = {}
-    t0 = time.perf_counter()
-    match = reuse.match if reuse is not None else max_weight_matching(a)
-    t["matching"] = time.perf_counter() - t0
-
-    # permute/scale with index-tracking data so refactor is a pure gather
-    t0 = time.perf_counter()
-    seg = np.repeat(np.arange(a.n), np.diff(a.indptr))
-    scale_entry = match.row_scale[seg] * match.col_scale[a.indices]
-    tracker = CSR(a.n, a.indptr.copy(), a.indices.copy(),
-                  np.arange(a.nnz, dtype=np.float64))
-    q = match.col_of_row.copy()
-    b2_track = tracker.permute(np.arange(a.n), q)
-
-    pat2 = CSR(a.n, b2_track.indptr, b2_track.indices,
-               np.ones(a.nnz)).sym_pattern()
-    if reuse is not None:
-        p, ord_name = reuse.p, reuse.ordering_name
-    else:
-        p, ord_name = select_ordering(pat2, candidates=opts.orderings)
-    t["ordering"] = time.perf_counter() - t0
-
-    t0 = time.perf_counter()
-    m_track = b2_track.permute(p, p)
-    src_map = m_track.data.astype(np.int64)
-    scale_map = scale_entry[src_map]
-    pat_m = pat2.permute(p, p)
-    choice, sym = select_kernel(pat_m, force_mode=opts.force_mode,
-                                relax=opts.relax, max_super=opts.max_super)
-    t["symbolic"] = time.perf_counter() - t0
-
-    t0 = time.perf_counter()
-    m = CSR(a.n, m_track.indptr, m_track.indices, np.ones(a.nnz))
-    plan = build_plan(pat_m, m, sym, mode=choice.mode,
-                      bulk_min_width=opts.bulk_min_width)
-    t["plan"] = time.perf_counter() - t0
-    t["total"] = sum(t.values())
-
-    return Analysis(n=a.n, opts=opts, match=match, q=q, p=p,
-                    ordering_name=ord_name, choice=choice, sym=sym, plan=plan,
-                    src_map=src_map, scale_map=scale_map,
-                    m_pattern=(m_track.indptr, m_track.indices), timings=t)
-
-
-def _m_values(an: Analysis, a: CSR) -> CSR:
-    data = a.data[an.src_map] * an.scale_map
-    return CSR(a.n, an.m_pattern[0], an.m_pattern[1], data)
-
-
-def _resolve_mesh(mesh):
-    """HyluOptions.mesh → a 1-D jax Mesh (or None for the unsharded path):
-    None passes through, an int N builds launch.mesh.make_solver_mesh(N),
-    a Mesh is validated to one axis."""
-    if mesh is None:
-        return None
-    if isinstance(mesh, (int, np.integer)):
-        from repro.launch.mesh import make_solver_mesh
-        return make_solver_mesh(int(mesh))
-    if not hasattr(mesh, "axis_names"):
-        raise TypeError(f"mesh must be None, an int device count, or a "
-                        f"jax.sharding.Mesh — got {type(mesh).__name__}")
-    if len(mesh.axis_names) != 1:
-        raise ValueError("the batched solver shards over one system-batch "
-                         f"axis; got a {len(mesh.axis_names)}-D mesh "
-                         f"{mesh.axis_names}")
-    return mesh
-
-
-def _mesh_cache_key(mesh):
-    """Hashable identity of a resolved mesh for the per-analysis jit cache:
-    same devices + axis name ⇒ same compiled programs."""
-    if mesh is None:
-        return None
-    return (mesh.axis_names[0],
-            tuple(d.id for d in mesh.devices.flat))
-
-
-def jax_repeated_engine(an: Analysis, dtype=None, use_pallas: bool | None = None,
-                        schedule: str | None = None, mesh=None):
-    """The pre-compiled repeated-solve engine for this analysis.
-
-    Built lazily and cached on the analysis (keyed by dtype/pallas/factor
-    schedule/mesh devices), so every subsequent factor/refactor/solve
-    through ``engine="jax"`` — and every batched call — is one
-    already-compiled XLA program.  ``mesh`` (default ``an.opts.mesh``)
-    shards the *batched* programs over the system-batch axis; the scalar
-    refactor/apply programs are always single-device."""
-    import jax.numpy as jnp
-
-    from .jax_engine import RepeatedSolveEngine
-    from .structure import build_solve_structure
-
-    dtype = jnp.float64 if dtype is None else dtype
-    use_pallas = an.opts.use_pallas if use_pallas is None else use_pallas
-    schedule = an.opts.factor_schedule if schedule is None else schedule
-    mesh = _resolve_mesh(an.opts.mesh if mesh is None else mesh)
-    key = (np.dtype(dtype).name, bool(use_pallas), schedule,
-           _mesh_cache_key(mesh))
-    eng = an.jit_cache.get(key)
-    if eng is None:
-        ss = build_solve_structure(an.plan,
-                                   bulk_min_width=an.opts.bulk_min_width)
-        eng = RepeatedSolveEngine(
-            an.plan, ss, src_map=an.src_map, scale_map=an.scale_map,
-            p=an.p, q=an.q, row_scale=an.match.row_scale,
-            col_scale=an.match.col_scale, perturb_eps=an.opts.perturb_eps,
-            dtype=dtype, use_pallas=use_pallas, schedule=schedule,
-            bulk_min_width=an.opts.bulk_min_width, mesh=mesh)
-        an.jit_cache[key] = eng
-    return eng
-
-
-def _factor_jax(an: Analysis, a: CSR) -> FactorState:
-    import jax
-    import jax.numpy as jnp
-
-    eng = jax_repeated_engine(an)
-    t = {}
-    t0 = time.perf_counter()
-    jf = eng.refactor(jnp.asarray(a.data))
-    jax.block_until_ready(jf.vals)
-    t["factor"] = time.perf_counter() - t0
-    return FactorState(analysis=an, factors=None, solve_plan=None, a=a,
-                       timings=t, engine="jax", jax_factors=jf)
-
-
-def factor(an: Analysis, a: CSR, engine=None) -> FactorState:
-    """Numeric factorization + solve-plan build.
-
-    engine: "ref" (numpy), "jax" (pre-compiled XLA; solve structure is
-    static so no per-factor solve-plan rebuild), a ref-compatible engine
-    module, or None → an.opts.engine."""
-    engine = an.opts.engine if engine is None else engine
-    if engine == "jax":
-        return _factor_jax(an, a)
-    if engine == "ref":
-        mod = ref_engine
-    elif hasattr(engine, "factor"):
-        mod = engine
-    else:
-        raise ValueError(f"unknown engine {engine!r}: expected 'ref', 'jax', "
-                         "or an engine module with a factor() function")
-    t = {}
-    t0 = time.perf_counter()
-    m = _m_values(an, a)
-    f = mod.factor(an.plan, m, perturb_eps=an.opts.perturb_eps)
-    t["factor"] = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    sp = ref_engine.build_solve_plan(f, bulk_min_width=an.opts.bulk_min_width)
-    t["solve_plan"] = time.perf_counter() - t0
-    return FactorState(analysis=an, factors=f, solve_plan=sp, a=a, timings=t)
-
-
-def refactor(st: FactorState, a_new: CSR) -> FactorState:
-    """Repeated-solve path: same pattern, new values; reuses the analysis
-    AND the solve plan's structure (values refresh only).  On the jax
-    engine this is a single pre-compiled ``a_data -> factors`` call."""
-    an = st.analysis
-    if st.engine == "jax":
-        return _factor_jax(an, a_new)
-    t = {}
-    t0 = time.perf_counter()
-    m = _m_values(an, a_new)
-    f = ref_engine.factor(an.plan, m, perturb_eps=an.opts.perturb_eps)
-    t["factor"] = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    sp = ref_engine.build_solve_plan(f, bulk_min_width=an.opts.bulk_min_width)
-    t["solve_plan"] = time.perf_counter() - t0
-    return FactorState(analysis=an, factors=f, solve_plan=sp, a=a_new, timings=t)
-
-
-def solve(st: FactorState, b: np.ndarray, refine: bool | None = None) -> tuple:
-    """Forward/backward substitution + iterative refinement (auto when pivot
-    perturbation occurred, per paper §2.3). Returns (x, info)."""
-    an = st.analysis
-    opts = an.opts
-    t0 = time.perf_counter()
-
-    if st.engine == "jax":
-        import jax.numpy as jnp
-
-        eng = jax_repeated_engine(an)
-        jf = st.jax_factors
-        n_perturb = int(jf.n_perturb)
-
-        def lu_apply(rhs: np.ndarray) -> np.ndarray:
-            return np.asarray(eng.apply(jf.vals, jf.inode_perm,
-                                        jnp.asarray(rhs)))
-    else:
-        f = st.factors
-        n_perturb = f.n_perturb
-
-        def lu_apply(rhs: np.ndarray) -> np.ndarray:
-            c = (an.match.row_scale * rhs)[an.p][f.inode_perm]
-            w = ref_engine.solve_lu(st.solve_plan, c)
-            z = np.empty_like(w); z[an.p] = w
-            y = np.empty_like(z); y[an.q] = z
-            return an.match.col_scale * y
-
-    x = lu_apply(b)
-    n_ref = 0
-    bnorm = float(np.abs(b).sum()) or 1.0
-    resid = float(np.abs(b - st.a.matvec(x)).sum()) / bnorm
-    # auto-refine when pivot perturbation occurred (paper §2.3) or the
-    # residual is above the target
-    do_refine = refine if refine is not None else (
-        n_perturb > 0 or resid > opts.refine_tol)
-    if do_refine:
-        for _ in range(opts.refine_max_iter):
-            if resid <= opts.refine_tol:
-                break
-            r = b - st.a.matvec(x)
-            x2 = x + lu_apply(r)
-            resid2 = float(np.abs(b - st.a.matvec(x2)).sum()) / bnorm
-            n_ref += 1
-            if resid2 >= resid:
-                break
-            x, resid = x2, resid2
-    info = dict(residual=resid, n_refine=n_ref, n_perturb=n_perturb,
-                solve_time=time.perf_counter() - t0)
-    return x, info
-
-
-def solve_system(a: CSR, b: np.ndarray, opts: HyluOptions | None = None):
-    """One-call convenience: analyze + factor + solve."""
-    an = analyze(a, opts)
-    st = factor(an, a)
-    x, info = solve(st, b)
-    info["timings"] = {"preprocess": an.timings, "factor": st.timings}
-    info["mode"] = an.choice.mode
-    info["ordering"] = an.ordering_name
-    info["engine"] = st.engine
-    return x, info
-
-
-# --------------------------------------------------------------------------
-# batched repeated solve: K value sets of one pattern as one XLA program
-# --------------------------------------------------------------------------
-def _pattern_of(a_pattern) -> tuple:
-    if isinstance(a_pattern, CSR):
-        return (a_pattern.indptr, a_pattern.indices)
-    indptr, indices = a_pattern
-    return (np.asarray(indptr), np.asarray(indices))
-
-
-def _batched_matvec(pattern: tuple, values_batch: np.ndarray,
-                    x_batch: np.ndarray) -> np.ndarray:
-    """(A_k x_k) for K CSR matrices sharing one pattern: one gather +
-    row-segment reduction for the whole batch.
-
-    Host-side (numpy) reference: the production jax path computes residuals
-    with the device matvec baked into the fused solver
-    (``jax_engine.make_csr_matvec_batched``); this stays as the oracle for
-    tests and as the host-loop benchmark baseline.  x_batch is (K, n) or
-    (K, n, m) multi-RHS."""
-    indptr, indices = pattern
-    if x_batch.ndim == 3:
-        prod = values_batch[:, :, None] * x_batch[:, indices]
-    else:
-        prod = values_batch * x_batch[:, indices]
-    counts = np.diff(indptr)
-    if len(counts) == 0:
-        return np.zeros_like(x_batch)
-    if counts.min() > 0:
-        return np.add.reduceat(prod, indptr[:-1], axis=1)
-    # reduceat mishandles empty rows; fall back to per-batch scatter-add
-    # (preserves the batch dtype, unlike bincount which promotes to float64)
-    seg = np.repeat(np.arange(len(counts)), counts)
-    out = np.zeros((x_batch.shape[0], len(counts)) + x_batch.shape[2:],
-                   dtype=prod.dtype)
-    for k in range(out.shape[0]):
-        np.add.at(out[k], seg, prod[k])
-    return out
-
-
-def _pad_k(eng, k: int) -> int:
-    """K padded up to a multiple of the engine's shard count."""
-    return -(-k // eng.n_shards) * eng.n_shards
-
-
-def _stage_values(eng, values_batch):
-    """Stage a (K, nnz) value set on device for the batched engine.
-
-    Honors committed device buffers: a jax array input is used in place —
-    no device→host→device round-trip (the pre-sharding code always pulled
-    values through numpy).  K is padded to a multiple of the mesh device
-    count by replicating system 0 (well-conditioned; padded systems are
-    masked out of every result), and the buffer is placed with the
-    engine's batch sharding.  Returns ``(values_dev (K_pad, nnz),
-    values_host | None, k)`` — ``values_host`` is the (K, nnz) float64
-    oracle when the input came from the host, else None (materialized
-    lazily by ``BatchedFactorState.values_batch``)."""
-    import jax
-    import jax.numpy as jnp
-
-    if isinstance(values_batch, jax.Array):
-        v = values_batch if values_batch.ndim > 1 else values_batch[None]
-        host = None
-        k = int(v.shape[0])
-        k_pad = _pad_k(eng, k)
-        if k_pad != k:
-            v = jnp.concatenate(
-                [v, jnp.broadcast_to(v[:1], (k_pad - k, v.shape[1]))])
-    else:
-        host = np.ascontiguousarray(
-            np.atleast_2d(np.asarray(values_batch, dtype=np.float64)))
-        k = host.shape[0]
-        k_pad = _pad_k(eng, k)
-        v = host if k_pad == k else np.concatenate(
-            [host, np.broadcast_to(host[:1], (k_pad - k, host.shape[1]))])
-    if eng.batch_sharding is not None:
-        v = jax.device_put(v, eng.batch_sharding)
-    elif not isinstance(v, jax.Array):
-        v = jnp.asarray(v)
-    return v, host, k
-
-
-def _stage_rhs(eng, b_batch, k: int, copy: bool = False):
-    """Stage right-hand sides (K, n) / (n,) broadcast / (K, n, m) on device:
-    same device-buffer honoring, zero-padding of K to the mesh multiple
-    (zero RHS ⇒ the padded systems converge on iteration 0), and batch
-    sharding placement.  A leading dimension that matches neither K nor 1
-    raises (it must not silently zero-pad a mis-sized batch).
-
-    copy=True forces a fresh device buffer even when the input is already
-    a correctly-shaped jax array — required when the staged buffer will be
-    *donated* but the source must survive (the pipeline re-stages a shared
-    RHS every step)."""
-    import jax
-    import jax.numpy as jnp
-
-    k_pad = _pad_k(eng, k)
-    if getattr(b_batch, "ndim", 1) > 1 and b_batch.shape[0] != k:
-        raise ValueError(f"b_batch has leading (batch) dimension "
-                         f"{b_batch.shape[0]} but the factorization batch "
-                         f"size is {k}")
-    if isinstance(b_batch, jax.Array):
-        b = b_batch
-        if b.ndim == 1:
-            b = jnp.broadcast_to(b, (k,) + b.shape)
-        if k_pad != k:
-            b = jnp.concatenate(
-                [b, jnp.zeros((k_pad - k,) + b.shape[1:], b.dtype)])
-        elif copy and b is b_batch:
-            b = jnp.array(b)                     # fresh, donatable buffer
-    else:
-        b = np.asarray(b_batch, dtype=np.float64)
-        if b.ndim == 1:
-            b = np.broadcast_to(b, (k,) + b.shape)
-        if k_pad != k:
-            b = np.concatenate(
-                [b, np.zeros((k_pad - k,) + b.shape[1:])])
-    if eng.batch_sharding is not None:
-        return jax.device_put(b, eng.batch_sharding)
-    return jnp.asarray(b)
-
-
-def factor_batched(an: Analysis, a_pattern, values_batch) -> BatchedFactorState:
-    """K numeric factorizations (one pattern, K value sets) as a single
-    pre-compiled vmapped XLA call — HYLU's repeated-solve optimization
-    lifted to a batch.
-
-    ``values_batch`` may be a host (K, nnz) array or a committed jax device
-    array (no re-upload).  With ``an.opts.mesh`` set the call is sharded
-    over the system-batch axis: K is padded to a multiple of the device
-    count and each device factors its shard with the identical per-system
-    program (bit-identical to the single-device path)."""
-    import jax
-
-    eng = jax_repeated_engine(an)
-    t = {}
-    t0 = time.perf_counter()
-    values_dev, values_host, k = _stage_values(eng, values_batch)
-    jf = eng.refactor_batched(values_dev)
-    jax.block_until_ready(jf.vals)
-    t["factor_batched"] = time.perf_counter() - t0
-    return BatchedFactorState(
-        analysis=an, a_pattern=_pattern_of(a_pattern),
-        values_dev=values_dev, vals=jf.vals, inode_perm=jf.inode_perm,
-        n_perturb=np.asarray(jf.n_perturb)[:k], timings=t, k=k,
-        _values_host=values_host)
-
-
-def solve_batched(bst: BatchedFactorState, b_batch: np.ndarray,
-                  refine: bool | None = None, donate: bool = False) -> tuple:
-    """Batched substitution + iterative refinement, fused on device: X[k]
-    solves A_k x = b_k against the K stored factorizations as ONE
-    pre-compiled XLA program — substitution, the batched CSR residual
-    matvec (pattern as compile-time constants) and the whole refinement
-    loop (``lax.while_loop`` with per-system improved/converged masking)
-    execute without any per-iteration host transfer.  Under a mesh the
-    program is shard_mapped over the system batch (padded K; results are
-    sliced back and bit-identical to the single-device path).
-
-    b_batch: (K, n), (n,) broadcast across the batch, or (K, n, m)
-    multi-RHS (adjoint/sensitivity workloads); host or committed jax
-    arrays.  Returns (X, info); info["residual"] is (K,) — or (K, m) for
-    multi-RHS — and info["n_refine_per_system"] counts accepted refinement
-    steps per system/RHS.  refine=False skips refinement; refine=None/True
-    runs it until converged, stalled, or refine_max_iter.
-
-    donate=True donates the A-values and RHS buffers into the call (the
-    sequence-pipeline mode): XLA may reuse their memory, and ``bst`` is
-    marked consumed — further solves against it raise."""
-    an = bst.analysis
-    opts = an.opts
-    eng = jax_repeated_engine(an)
-    if bst.consumed:
-        raise RuntimeError(
-            "this BatchedFactorState was consumed by a donating solve — "
-            "refactor (factor_batched) before solving again")
-    t0 = time.perf_counter()
-    if donate and bst._values_host is None:
-        _ = bst.values_batch    # materialize the host oracle before the
-        #                         device buffer is donated away
-    b_dev = _stage_rhs(eng, b_batch, bst.k)
-    solver = eng.refined_batched_solver(*bst.a_pattern, donate=donate)
-    max_iter = 0 if refine is False else opts.refine_max_iter
-    x, resid, n_iter, n_ref_sys = solver(
-        bst.vals, bst.inode_perm, bst.values_dev,
-        b_dev, max_iter, opts.refine_tol)
-    if donate:
-        bst.consumed = True
-        bst.values_dev = None
-    k = bst.k
-    x = np.asarray(x)[:k]
-    info = dict(residual=np.asarray(resid)[:k], n_refine=int(n_iter),
-                n_refine_per_system=np.asarray(n_ref_sys)[:k],
-                n_perturb=bst.n_perturb,
-                solve_time=time.perf_counter() - t0)
-    return x, info
-
-
-def _solve_batched_hostloop(bst: BatchedFactorState, b_batch: np.ndarray,
-                            refine: bool | None = None) -> tuple:
-    """Pre-fusion reference implementation of :func:`solve_batched`: device
-    substitution but numpy residuals and a Python refinement loop (one
-    host round-trip per iteration).  Kept as the benchmark baseline the
-    fused path is measured against, and as a parity oracle — same
-    per-system improved/converged masking, same multi-RHS shapes."""
-    import jax.numpy as jnp
-
-    an = bst.analysis
-    opts = an.opts
-    eng = jax_repeated_engine(an)
-    t0 = time.perf_counter()
-    b_batch = np.asarray(b_batch, dtype=np.float64)
-    if b_batch.ndim == 1:
-        b_batch = np.broadcast_to(b_batch, (bst.k, b_batch.shape[0]))
-
-    # the oracle path always runs unsharded at the true batch size: slice
-    # any mesh padding off the (possibly sharded) device buffers
-    vals_k, inode_k = bst.vals[:bst.k], bst.inode_perm[:bst.k]
-
-    def residuals(x):
-        r = b_batch - _batched_matvec(bst.a_pattern, bst.values_batch, x)
-        return r, np.abs(r).sum(axis=1) / bnorm
-
-    bnorm = np.abs(b_batch).sum(axis=1)          # (K,) or (K, m)
-    bnorm = np.where(bnorm == 0.0, 1.0, bnorm)
-    x = np.asarray(eng.apply_batched(vals_k, inode_k,
-                                     jnp.asarray(b_batch)))
-    r, resid = residuals(x)
-    n_ref = 0
-    alive = np.ones(resid.shape, bool)
-    max_iter = 0 if refine is False else opts.refine_max_iter
-    for _ in range(max_iter):
-        need = alive & (resid > opts.refine_tol)
-        if not need.any():
-            break
-        x2 = x + np.asarray(eng.apply_batched(vals_k, inode_k,
-                                              jnp.asarray(r)))
-        r2, resid2 = residuals(x2)
-        n_ref += 1
-        improved = resid2 < resid
-        upd = need & improved                     # mirror the fused masking
-        x = np.where(upd[:, None], x2, x)
-        r = np.where(upd[:, None], r2, r)
-        resid = np.where(upd, resid2, resid)
-        alive = alive & (improved | ~need)
-    info = dict(residual=resid, n_refine=n_ref, n_perturb=bst.n_perturb,
-                solve_time=time.perf_counter() - t0)
-    return x, info
-
-
-def _seed_values(values_batch) -> np.ndarray:
-    """The (nnz,) float64 host values that seed the analysis: system 0 of
-    the (possibly committed-device) batch.  Indexes down to one row
-    *before* the host transfer, so a committed (K, nnz) buffer costs one
-    row D2H, not K; accepts a list/tuple of value sets, a (K, nnz) batch,
-    or a single (nnz,) vector."""
-    v0 = values_batch
-    while isinstance(v0, (list, tuple)) or getattr(v0, "ndim", 1) > 1:
-        v0 = v0[0]
-    return np.asarray(v0, dtype=np.float64).copy()
-
-
-def _is_step_sequence(values_batch) -> bool:
-    """True when values_batch is a T-step sequence — a list/tuple of 2-D
-    (K, nnz) value sets or a stacked (T, K, nnz) array — rather than one
-    batched step.  A list of 1-D (nnz,) value sets keeps its historical
-    meaning: ONE batched step of K systems (np.atleast_2d semantics)."""
-    if isinstance(values_batch, (list, tuple)):
-        if not values_batch:
-            return False
-        first = values_batch[0]
-        ndim = getattr(first, "ndim", None)
-        return (np.asarray(first).ndim if ndim is None else ndim) >= 2
-    ndim = getattr(values_batch, "ndim", None)
-    return ndim == 3
-
-
-def solve_sequence(a_pattern, values_batch, b_batch,
-                   opts: HyluOptions | None = None) -> tuple:
-    """Repeated-solve convenience (the paper's §3.2 scenario, batched):
-    one analysis, then batched factorizations + solves as pre-compiled
-    XLA programs (sharded over the mesh when ``opts.mesh`` is set).
-
-    a_pattern     CSR (or (indptr, indices)) — the shared sparsity pattern
-    values_batch  (K, nnz) value sets — ONE batched step — or a T-step
-                  sequence ((T, K, nnz) array, or a list of per-step 2-D
-                  (K, nnz) arrays, host or committed jax device buffers).
-                  A list of 1-D (nnz,) vectors keeps its historical
-                  meaning: one batched step of K systems.  The first
-                  value set seeds the analysis (matching/ordering are
-                  value-dependent but stable across the mild value drift
-                  of Newton/transient sequences)
-    b_batch       (K, n) right-hand sides, (n,) broadcast, or (K, n, m)
-                  multi-RHS (adjoint/sensitivity sweeps); for a step
-                  sequence, either one such RHS reused every step or a
-                  list/tuple with one entry per step
-
-    For a single step: returns (x (K, n[, m]), info) as before.
-
-    For a T-step sequence the calls run as an **async double-buffered
-    pipeline**: while the device factors + solves step t, the host stages
-    step t+1's values (``jax.device_put`` overlaps the copy with compute),
-    and nothing blocks until the final gather — so H2D staging hides
-    behind solves.  With ``opts.donate`` each step additionally recycles
-    the previous step's factor buffers (``refactor_batched_reuse``) and
-    donates the consumed value/RHS buffers, so a long refactor stream
-    runs allocation-flat.  Returns (x (T, K, n[, m]), info) with
-    info["residual"] (T, K[, m]) and per-step refinement counts."""
-    if _is_step_sequence(values_batch):
-        return _solve_sequence_pipelined(a_pattern, values_batch, b_batch,
-                                         opts)
-    pattern = _pattern_of(a_pattern)
-    n = len(pattern[0]) - 1
-    a0 = CSR(n, pattern[0], pattern[1], _seed_values(values_batch))
-    an = analyze(a0, opts)
-    bst = factor_batched(an, pattern, values_batch)
-    x, info = solve_batched(bst, b_batch)
-    info["timings"] = {"preprocess": an.timings, "factor": bst.timings}
-    info["mode"] = an.choice.mode
-    info["ordering"] = an.ordering_name
-    info["engine"] = "jax-batched"
-    info["k"] = bst.k
-    return x, info
-
-
-def _solve_sequence_pipelined(a_pattern, values_steps, b_steps,
-                              opts: HyluOptions | None = None) -> tuple:
-    """The T-step async pipeline behind :func:`solve_sequence`.
-
-    Per step: refactor (optionally donating the previous step's factor
-    buffers into the allocation) + the fused refined solve (optionally
-    donating the step's A-values/RHS buffers), dispatched asynchronously;
-    step t+1's values are staged to device immediately after dispatch so
-    the H2D copy overlaps the device's work on step t.  Host↔device
-    synchronization happens once, at the end."""
-    import jax
-
-    steps_v = (list(values_steps) if isinstance(values_steps, (list, tuple))
-               else [values_steps[t] for t in range(values_steps.shape[0])])
-    n_steps = len(steps_v)
-    pattern = _pattern_of(a_pattern)
-    n = len(pattern[0]) - 1
-
-    # per-step RHS must come as a list/tuple (one entry per step, each any
-    # single-step shape); a bare array is a single-step RHS reused every
-    # step — keeps (K, n, m) multi-RHS unambiguous
-    per_step_b = isinstance(b_steps, (list, tuple))
-    if per_step_b and len(b_steps) != n_steps:
-        raise ValueError(f"got {len(b_steps)} per-step right-hand sides "
-                         f"for {n_steps} steps")
-
-    def b_of(t):
-        return b_steps[t] if per_step_b else b_steps
-
-    a0 = CSR(n, pattern[0], pattern[1], _seed_values(steps_v[0]))
-    an = analyze(a0, opts)
-    opts = an.opts
-    eng = jax_repeated_engine(an)
-    donate = bool(opts.donate)
-    solver = eng.refined_batched_solver(*pattern, donate=donate)
-    max_iter = opts.refine_max_iter
-
-    t_all = time.perf_counter()
-    # stage step 0 (the analysis already synced the host, so this is cheap);
-    # copy=donate: a donated staging buffer must never BE the caller's (or
-    # a shared across-steps) committed array — step t+1 restages it
-    v_dev, _, k = _stage_values(eng, steps_v[0])
-    b_dev = _stage_rhs(eng, b_of(0), k, copy=donate)
-    outs, n_pert = [], []
-    prev = None
-    for t in range(n_steps):
-        if donate and prev is not None:
-            jf = eng.refactor_batched_reuse(prev.vals, prev.inode_perm,
-                                            v_dev)
-        else:
-            jf = eng.refactor_batched(v_dev)
-        x, resid, n_iter, n_ref = solver(jf.vals, jf.inode_perm, v_dev,
-                                         b_dev, max_iter, opts.refine_tol)
-        # stage step t+1 while the device chews on step t — this H2D copy
-        # is the one the double-buffering hides
-        if t + 1 < n_steps:
-            v_dev, _, k2 = _stage_values(eng, steps_v[t + 1])
-            if k2 != k:
-                raise ValueError(f"step {t + 1} has batch size {k2}, "
-                                 f"step 0 had {k}")
-            b_dev = _stage_rhs(eng, b_of(t + 1), k, copy=donate)
-        outs.append((x, resid, n_iter, n_ref))
-        n_pert.append(jf.n_perturb)
-        prev = jf
-    jax.block_until_ready(outs[-1][0])           # the single sync point
-    t_all = time.perf_counter() - t_all
-
-    x = np.stack([np.asarray(o[0])[:k] for o in outs])
-    resid = np.stack([np.asarray(o[1])[:k] for o in outs])
-    info = dict(residual=resid,
-                n_refine=[int(o[2]) for o in outs],
-                n_refine_per_system=np.stack(
-                    [np.asarray(o[3])[:k] for o in outs]),
-                n_perturb=np.stack([np.asarray(p)[:k] for p in n_pert]),
-                solve_time=t_all,
-                timings={"preprocess": an.timings, "pipeline": t_all},
-                mode=an.choice.mode, ordering=an.ordering_name,
-                engine="jax-batched", k=k, steps=n_steps,
-                donate=donate)
-    return x, info
+from .options import (HyluOptions, PLAN_OPTION_FIELDS, plan_options_key,
+                      pattern_key, plan_fingerprint,
+                      _resolve_mesh, _mesh_cache_key)
+from .analysis import (Analysis, FactorState, analyze, factor, refactor,
+                       solve, solve_system, jax_repeated_engine,
+                       _m_values, _factor_jax)
+from .batched import (BatchedFactorState, factor_batched, solve_batched,
+                      solve_sequence, _pattern_of, _batched_matvec,
+                      _pad_k, _stage_values, _stage_rhs,
+                      _solve_batched_hostloop, _seed_values,
+                      _is_step_sequence, _solve_sequence_pipelined)
+
+__all__ = [
+    "HyluOptions", "PLAN_OPTION_FIELDS", "plan_options_key",
+    "pattern_key", "plan_fingerprint",
+    "Analysis", "FactorState", "BatchedFactorState",
+    "analyze", "factor", "refactor", "solve", "solve_system",
+    "jax_repeated_engine",
+    "factor_batched", "solve_batched", "solve_sequence",
+    # private oracles/helpers kept importable for tests and benchmarks
+    "_resolve_mesh", "_mesh_cache_key", "_m_values", "_factor_jax",
+    "_pattern_of", "_batched_matvec", "_pad_k", "_stage_values",
+    "_stage_rhs", "_solve_batched_hostloop", "_seed_values",
+    "_is_step_sequence", "_solve_sequence_pipelined",
+]

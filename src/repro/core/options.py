@@ -1,0 +1,137 @@
+"""Solver options, mesh resolution, and pattern fingerprints.
+
+This is the bottom layer of the core stack (options → analysis → batched →
+api facade): it depends on nothing but numpy and is imported by every other
+core module, so the option schema and the content-address of a plan live in
+exactly one place.
+
+Fingerprints are the content address of the plan cache
+(:mod:`repro.core.plan_cache`) and of the serving dispatcher
+(:mod:`repro.serve.solver_service`):
+
+    pattern_key(n, indptr, indices)        — the sparsity pattern alone
+    plan_fingerprint(pattern, opts)        — pattern + every option that
+                                             changes the analysis artifact or
+                                             the compiled engine
+
+Two analyses share a fingerprint iff they produce interchangeable plans AND
+interchangeable compiled programs.  Runtime-only knobs (``engine``,
+``mesh``, ``donate``, ``refine_max_iter``, ``refine_tol``) are deliberately
+NOT part of the fingerprint: they select how a cached plan is *executed*,
+not what is computed at analysis time (the per-analysis jit cache already
+keys engines on dtype/pallas/schedule/mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class HyluOptions:
+    """Solver options — every knob of the analyze/factor/solve pipeline.
+    Field-by-field documentation lives in docs/API.md (kept in sync by the
+    docs-lint CI step)."""
+    force_mode: str | None = None          # rowrow | hybrid | supernodal
+    orderings: tuple = ("min_degree", "nested_dissection", "natural")
+    relax: int = 8
+    max_super: int = 128
+    perturb_eps: float = 1e-8
+    refine_max_iter: int = 3
+    refine_tol: float = 1e-12
+    bulk_min_width: int = 8
+    engine: str = "ref"                    # ref | jax — default numeric engine
+    use_pallas: bool = False               # route jax panel updates via Pallas
+    factor_schedule: str = "bucketed"      # bucketed (O(levels) trace) |
+                                           # unrolled (O(nodes+edges) oracle)
+    mesh: object = None                    # shard the batched path over the
+                                           # system-batch axis K: None (single
+                                           # device) | int (first N devices,
+                                           # launch.mesh.make_solver_mesh) |
+                                           # a 1-D jax.sharding.Mesh
+    donate: bool = False                   # sequence pipeline donates value/
+                                           # RHS/factor buffers step-to-step
+                                           # (consumed states; no realloc)
+
+
+# Options that change the analysis artifact (ordering/symbolic/plan) or the
+# compiled engine built from it — the option half of a plan fingerprint.
+PLAN_OPTION_FIELDS = ("force_mode", "orderings", "relax", "max_super",
+                      "perturb_eps", "bulk_min_width", "factor_schedule",
+                      "use_pallas")
+
+
+def plan_options_key(opts: HyluOptions | None) -> tuple:
+    """Hashable tuple of the plan/engine-affecting option fields (see
+    ``PLAN_OPTION_FIELDS``) — equal keys ⇒ interchangeable plans+engines."""
+    opts = opts or HyluOptions()
+    out = []
+    for name in PLAN_OPTION_FIELDS:
+        v = getattr(opts, name)
+        out.append(tuple(v) if isinstance(v, (list, tuple)) else v)
+    return tuple(out)
+
+
+def _pattern_parts(a_or_pattern) -> tuple:
+    """(n, indptr, indices) from a CSR-like object or an (indptr, indices)
+    pair."""
+    if hasattr(a_or_pattern, "indptr"):
+        return (int(a_or_pattern.n), a_or_pattern.indptr,
+                a_or_pattern.indices)
+    indptr, indices = a_or_pattern
+    indptr = np.asarray(indptr)
+    return len(indptr) - 1, indptr, indices
+
+
+def pattern_key(a_or_pattern) -> str:
+    """Deterministic content hash of a sparsity pattern alone:
+    sha256 over (n, indptr, indices).  Value- and option-independent."""
+    n, indptr, indices = _pattern_parts(a_or_pattern)
+    h = hashlib.sha256(b"hylu-pattern-v1")
+    h.update(int(n).to_bytes(8, "little"))
+    h.update(np.ascontiguousarray(indptr, dtype=np.int64).tobytes())
+    h.update(np.ascontiguousarray(indices, dtype=np.int64).tobytes())
+    return h.hexdigest()
+
+
+def plan_fingerprint(a_or_pattern, opts: HyluOptions | None = None,
+                     pkey: str | None = None) -> str:
+    """The content address of one analysis artifact: sha256 over the
+    pattern key plus ``plan_options_key(opts)``.  This is the key of the
+    plan cache and of the serving dispatcher's group-by.  ``pkey`` passes
+    an already-computed ``pattern_key`` so callers that have one in hand
+    don't re-hash the O(nnz) pattern."""
+    h = hashlib.sha256(b"hylu-plan-v1")
+    h.update((pattern_key(a_or_pattern) if pkey is None else pkey).encode())
+    h.update(repr(plan_options_key(opts)).encode())
+    return h.hexdigest()
+
+
+def _resolve_mesh(mesh):
+    """HyluOptions.mesh → a 1-D jax Mesh (or None for the unsharded path):
+    None passes through, an int N builds launch.mesh.make_solver_mesh(N),
+    a Mesh is validated to one axis."""
+    if mesh is None:
+        return None
+    if isinstance(mesh, (int, np.integer)):
+        from repro.launch.mesh import make_solver_mesh
+        return make_solver_mesh(int(mesh))
+    if not hasattr(mesh, "axis_names"):
+        raise TypeError(f"mesh must be None, an int device count, or a "
+                        f"jax.sharding.Mesh — got {type(mesh).__name__}")
+    if len(mesh.axis_names) != 1:
+        raise ValueError("the batched solver shards over one system-batch "
+                         f"axis; got a {len(mesh.axis_names)}-D mesh "
+                         f"{mesh.axis_names}")
+    return mesh
+
+
+def _mesh_cache_key(mesh):
+    """Hashable identity of a resolved mesh for the per-analysis jit cache:
+    same devices + axis name ⇒ same compiled programs."""
+    if mesh is None:
+        return None
+    return (mesh.axis_names[0],
+            tuple(d.id for d in mesh.devices.flat))

@@ -1,0 +1,206 @@
+"""SolverService: mixed-pattern serving on top of the batched engines.
+
+The batched repeated-solve path (PRs 1–4) factors and solves K systems of
+ONE sparsity pattern as pre-compiled XLA programs.  Production traffic is
+not that polite: a stream of requests mixes circuit, banded, unsymmetric,
+… patterns arbitrarily.  This module is the dispatcher that makes the
+mixed stream look like per-pattern batches:
+
+    requests (a_i, b_i)  ──fingerprint──►  groups by plan_fingerprint
+        │                                      │  chunk + pad to batch_size
+        ▼                                      ▼
+    PlanCache (memory → checkpoints/ → analyze)   factor_batched+solve_batched
+        │                                      │
+        └── Analysis + compiled engines        └── scatter back to
+                                                   request order
+
+Padding uses the engines' existing alive-masking: padded systems replicate
+the chunk's first value set with a zero RHS (they converge on refinement
+iteration 0 and are sliced away), so every (pattern, batch_size) pair
+compiles exactly ONE XLA program no matter how group sizes fluctuate.
+Per-request results are bit-identical to running that request's pattern
+group through ``factor_batched``/``solve_batched`` directly — batching and
+padding never change per-system numerics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.matrix import CSR
+from repro.core.options import HyluOptions, plan_fingerprint
+from repro.core.plan_cache import PlanCache, DEFAULT_CACHE_DIR
+from repro.core.batched import factor_batched, solve_batched
+
+
+@dataclasses.dataclass
+class SolveRequest:
+    """One serving request: solve ``a x = b`` for this request's matrix.
+
+    a    — CSR (pattern + values); anything with ``tocsr()`` is converted
+    b    — (n,) right-hand side or (n, m) multi-RHS
+    tag  — opaque caller id, passed through to the result"""
+    a: CSR
+    b: np.ndarray
+    tag: object = None
+
+
+@dataclasses.dataclass
+class SolveResult:
+    """Per-request outcome, in the original request order."""
+    x: np.ndarray              # (n,) or (n, m)
+    residual: object           # float or (m,) — scaled 1-norm residual(s)
+    n_refine: int              # accepted refinement steps for this system
+    n_perturb: int             # pivot perturbations in this factorization
+    fingerprint: str           # the plan-cache key this request hit
+    group_size: int            # how many requests shared the dispatch group
+    tag: object = None
+
+
+def _as_csr(a) -> CSR:
+    if isinstance(a, CSR):
+        return a
+    if hasattr(a, "tocsr"):
+        return CSR.from_scipy(a.tocsr())
+    raise TypeError(f"request matrix must be a CSR (or scipy sparse), got "
+                    f"{type(a).__name__}")
+
+
+class SolverService:
+    """Front-end for heterogeneous (pattern, values, b) solve traffic.
+
+    opts           — HyluOptions template applied to every request (mesh,
+                     refinement, kernel thresholds, …)
+    cache          — a PlanCache to share across services; built from
+                     cache_dir/cache_capacity when None
+    cache_dir      — artifact-store directory for the internally-built
+                     cache (None disables disk persistence)
+    cache_capacity — LRU bound of the internally-built cache
+    batch_size     — fixed dispatch batch: every group is chunked and
+                     padded up to this many systems, so each pattern
+                     compiles ONE batched program regardless of how the
+                     traffic mix fluctuates; None dispatches each group at
+                     its natural size (one compile per distinct group size)
+
+    Use ``solve_batch(requests)`` for one-shot dispatch, or
+    ``submit(a, b)`` + ``flush()`` to accumulate a serving window first.
+    """
+
+    def __init__(self, opts: HyluOptions | None = None,
+                 cache: PlanCache | None = None,
+                 cache_dir: str | None = DEFAULT_CACHE_DIR,
+                 cache_capacity: int = 32,
+                 batch_size: int | None = 8):
+        self.opts = opts or HyluOptions()
+        self.cache = cache if cache is not None else PlanCache(
+            capacity=cache_capacity, directory=cache_dir)
+        if batch_size is not None and batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1, got {batch_size}")
+        self.batch_size = batch_size
+        self.stats = dict(requests=0, groups=0, dispatches=0,
+                          padded_systems=0, patterns_seen=0, solve_s=0.0)
+        self._pattern_modes: dict[str, str] = {}   # fingerprint → kernel mode
+        self._pending: list[SolveRequest] = []
+
+    # ---------------------------------------------------------------- queue
+    def submit(self, a, b, tag=None) -> int:
+        """Enqueue one request; returns its position in the next flush."""
+        self._pending.append(SolveRequest(a=_as_csr(a), b=np.asarray(b),
+                                          tag=tag))
+        return len(self._pending) - 1
+
+    def flush(self) -> list:
+        """Dispatch every queued request; results in submit order.  The
+        queue is cleared only after the dispatch returns — a request that
+        fails validation leaves the whole window queued (fix or drop it,
+        then flush again) instead of silently discarding the rest."""
+        results = self.solve_batch(self._pending)
+        self._pending = []
+        return results
+
+    # ------------------------------------------------------------- dispatch
+    def solve_batch(self, requests) -> list:
+        """Group a heterogeneous request list by plan fingerprint, dispatch
+        each group through the cached batched engines, and scatter results
+        back to request order.  Requests may be ``SolveRequest`` objects or
+        bare ``(a, b)`` pairs.  Returns ``list[SolveResult]`` aligned with
+        ``requests``."""
+        reqs = []
+        for r in requests:
+            if not isinstance(r, SolveRequest):
+                a, b = r
+                r = SolveRequest(a=a, b=b)
+            a = _as_csr(r.a)
+            b = np.asarray(r.b, dtype=np.float64)
+            if b.ndim not in (1, 2) or b.shape[0] != a.n:
+                raise ValueError(
+                    f"request RHS shape {b.shape} does not match its "
+                    f"matrix (n={a.n}; expected (n,) or (n, m))")
+            reqs.append(SolveRequest(a=a, b=b, tag=r.tag))
+        t0 = time.perf_counter()
+
+        # group by (fingerprint, RHS tail shape), preserving request order
+        # within each group; differing multi-RHS widths of one pattern
+        # dispatch separately (the batched RHS must be rectangular)
+        groups: dict[tuple, list[int]] = {}
+        for i, r in enumerate(reqs):
+            fp = plan_fingerprint(r.a, self.opts)
+            groups.setdefault((fp, r.b.shape[1:]), []).append(i)
+
+        results: list = [None] * len(reqs)
+        for (fp, _tail), idxs in groups.items():
+            if fp not in self._pattern_modes:
+                self.stats["patterns_seen"] += 1
+            self.stats["groups"] += 1
+            an = self.cache.get_or_analyze(reqs[idxs[0]].a, self.opts,
+                                           fingerprint=fp)
+            self._pattern_modes[fp] = an.choice.mode
+            step = self.batch_size or len(idxs)
+            for c0 in range(0, len(idxs), step):
+                chunk = idxs[c0:c0 + step]
+                self._dispatch(an, fp, reqs, chunk, pad_to=step,
+                               group_size=len(idxs), results=results)
+
+        self.stats["requests"] += len(reqs)
+        self.stats["solve_s"] += time.perf_counter() - t0
+        return results
+
+    def _dispatch(self, an, fp, reqs, chunk, pad_to, group_size, results):
+        """One padded batched factor+solve for ``chunk`` (request indices
+        of one pattern/RHS-shape group), scattered into ``results``."""
+        g = len(chunk)
+        k = max(pad_to, g)
+        a0 = reqs[chunk[0]].a
+        vb = np.empty((k, a0.nnz), dtype=np.float64)
+        bb = np.zeros((k,) + reqs[chunk[0]].b.shape, dtype=np.float64)
+        for j, i in enumerate(chunk):
+            vb[j] = reqs[i].a.data
+            bb[j] = reqs[i].b
+        # pad with the chunk's first system + zero RHS: well-conditioned,
+        # converges on iteration 0 under the per-system alive-masking
+        vb[g:] = vb[0]
+
+        bst = factor_batched(an, (a0.indptr, a0.indices), vb)
+        x, info = solve_batched(bst, bb)
+        self.stats["dispatches"] += 1
+        self.stats["padded_systems"] += k - g
+        for j, i in enumerate(chunk):
+            results[i] = SolveResult(
+                x=x[j],
+                residual=(float(info["residual"][j])
+                          if np.ndim(info["residual"][j]) == 0
+                          else np.asarray(info["residual"][j])),
+                n_refine=int(info["n_refine_per_system"][j].max()
+                             if np.ndim(info["n_refine_per_system"][j])
+                             else info["n_refine_per_system"][j]),
+                n_perturb=int(info["n_perturb"][j]),
+                fingerprint=fp, group_size=group_size, tag=reqs[i].tag)
+
+    # ------------------------------------------------------------ introspect
+    @property
+    def pattern_modes(self) -> dict:
+        """fingerprint → kernel mode chosen for that pattern (rowrow /
+        hybrid / supernodal) — the routing record tests assert on."""
+        return dict(self._pattern_modes)

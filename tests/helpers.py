@@ -78,26 +78,40 @@ def singleton_system(n=36, seed=0):
     return a.tocsr()
 
 
-# name -> (generator, routing_n, expected_mode). expected_mode is what
-# kernel_select routes the scenario to *at routing_n* with default
-# thresholds: banded/PDE bands have flops/nnz ≈ half-bandwidth ≪ 40, so at
-# test scale they are circuit-like by the NICSLU criterion (rowrow);
-# dense-ish crosses the flops/nnz threshold at n≈80 → hybrid.
+# name -> (generator, routing_n, expected_mode, routing_kwargs).
+# expected_mode is what kernel_select routes the scenario to at
+# routing-scale (gen(n=routing_n, **routing_kwargs)) with default
+# thresholds: circuit/singleton stay below the NICSLU flops/nnz criterion
+# (rowrow); dense-ish crosses it at n≈80 → hybrid; banded/PDE bands have
+# flops/nnz ≈ half-bandwidth, so the routing-scale band is widened to
+# half_bw=48 where the discretized-operator class genuinely lands on the
+# hybrid supernodal kernels (at default half_bw=6 a band is circuit-like
+# and correctly routes rowrow — the other tests keep using that size).
 SCENARIOS = {
-    "circuit": (circuit_system, 48, "rowrow"),
-    "banded": (banded_system, 48, "rowrow"),
-    "denseish": (denseish_system, 80, "hybrid"),
-    "singleton": (singleton_system, 48, "rowrow"),
+    "circuit": (circuit_system, 48, "rowrow", {}),
+    "banded": (banded_system, 144, "hybrid", {"half_bw": 48}),
+    "denseish": (denseish_system, 80, "hybrid", {}),
+    "singleton": (singleton_system, 48, "rowrow", {}),
 }
 
 
 def scenario_system(name, n=36, seed=0):
     """(CSR, scipy_csr, b, expected_mode) for one named scenario.
-    expected_mode refers to routing at SCENARIOS' routing_n, not n."""
-    gen, _, expected_mode = SCENARIOS[name]
+    expected_mode refers to routing at SCENARIOS' routing scale, not n."""
+    gen, _, expected_mode, _ = SCENARIOS[name]
     a = gen(n=n, seed=seed)
     b = np.random.default_rng(seed + 1).normal(size=n)
     return CSR.from_scipy(a), a, b, expected_mode
+
+
+def routing_system(name, seed=0):
+    """(CSR, b, expected_mode) for one named scenario AT ROUTING SCALE —
+    the size/shape where kernel_select's thresholds route it to its
+    intended kernel mode (circuit→rowrow, banded/denseish→hybrid)."""
+    gen, routing_n, expected_mode, kwargs = SCENARIOS[name]
+    a = gen(n=routing_n, seed=seed, **kwargs)
+    b = np.random.default_rng(seed + 1).normal(size=routing_n)
+    return CSR.from_scipy(a), b, expected_mode
 
 
 def empty_row_pattern(n=8, seed=0):

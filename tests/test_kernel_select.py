@@ -12,15 +12,17 @@ from repro.core.kernel_select import (select_kernel, FLOPS_PER_NNZ_ROWROW,
                                       COVERAGE_ROWROW)
 from repro.core.matching import max_weight_matching
 
-from tests.helpers import SCENARIOS, scenario_system, empty_row_pattern
+from tests.helpers import (SCENARIOS, scenario_system, routing_system,
+                           empty_row_pattern)
 
 MODES = ["rowrow", "hybrid", "supernodal"]
 
 
 @pytest.mark.parametrize("name", list(SCENARIOS))
 def test_scenario_routes_to_expected_mode(name):
-    gen, routing_n, expected = SCENARIOS[name]
-    Ac, _, _, _ = scenario_system(name, n=routing_n, seed=0)
+    _, routing_n, expected, _ = SCENARIOS[name]
+    Ac, _, expected2 = routing_system(name, seed=0)
+    assert expected2 == expected and Ac.n == routing_n
     an = analyze(Ac)
     st = an.choice.stats
     assert an.choice.mode == expected, (name, an.choice.reason)

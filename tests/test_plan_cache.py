@@ -1,0 +1,316 @@
+"""Plan-cache suite: content-addressed fingerprints, LRU + hit/miss
+semantics, the analyze(reuse=) pattern-fingerprint validation, and the
+disk persistence round trip (in-process and across a fresh subprocess,
+bit-identical solves — observed 0.0 like test_sharding.py)."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import CSR, HyluOptions, analyze
+from repro.core.api import (factor, factor_batched, solve, solve_batched,
+                            pattern_key, plan_fingerprint)
+from repro.core.plan_cache import (PlanCache, PlanCacheFormatError,
+                                   FORMAT_VERSION, save_analysis,
+                                   load_analysis)
+
+from tests.helpers import scenario_system
+
+
+def _case(name="circuit", n=40, seed=0, k=3):
+    Ac, _, b, _ = scenario_system(name, n=n, seed=seed)
+    rng = np.random.default_rng(seed + 7)
+    vb = Ac.data[None, :] * rng.uniform(0.9, 1.1, (k, Ac.nnz))
+    bb = rng.normal(size=(k, Ac.n))
+    return Ac, vb, bb
+
+
+# --------------------------------------------------------------------------
+# fingerprints
+# --------------------------------------------------------------------------
+def test_fingerprint_deterministic_and_content_addressed():
+    Ac, _, _ = _case()
+    assert pattern_key(Ac) == pattern_key((Ac.indptr, Ac.indices))
+    assert plan_fingerprint(Ac, HyluOptions()) == \
+        plan_fingerprint(Ac, HyluOptions())
+    # same pattern, different values → same address (values are not content)
+    A2 = CSR(Ac.n, Ac.indptr, Ac.indices, Ac.data * 2.0)
+    assert plan_fingerprint(A2, HyluOptions()) == \
+        plan_fingerprint(Ac, HyluOptions())
+    # different pattern → different address
+    B, _, _ = _case("banded")
+    assert plan_fingerprint(B, HyluOptions()) != \
+        plan_fingerprint(Ac, HyluOptions())
+
+
+def test_fingerprint_distinct_per_plan_affecting_option():
+    """Differing kernel modes / plan options are distinct cache entries;
+    runtime-only knobs (engine/mesh/donate/refine) are not."""
+    Ac, _, _ = _case()
+    base = plan_fingerprint(Ac, HyluOptions())
+    distinct = [HyluOptions(force_mode="rowrow"),
+                HyluOptions(force_mode="hybrid"),
+                HyluOptions(force_mode="supernodal"),
+                HyluOptions(relax=2), HyluOptions(max_super=16),
+                HyluOptions(orderings=("natural",)),
+                HyluOptions(perturb_eps=1e-6),
+                HyluOptions(bulk_min_width=4),
+                HyluOptions(factor_schedule="unrolled"),
+                HyluOptions(use_pallas=True)]
+    fps = [plan_fingerprint(Ac, o) for o in distinct]
+    assert len({base, *fps}) == len(distinct) + 1
+    same = [HyluOptions(engine="jax"), HyluOptions(mesh=1),
+            HyluOptions(donate=True), HyluOptions(refine_max_iter=9),
+            HyluOptions(refine_tol=1e-9)]
+    for o in same:
+        assert plan_fingerprint(Ac, o) == base, o
+
+
+def test_analysis_carries_fingerprint():
+    Ac, _, _ = _case()
+    opts = HyluOptions()
+    an = analyze(Ac, opts)
+    assert an.pattern_key == pattern_key(Ac)
+    assert an.fingerprint == plan_fingerprint(Ac, opts)
+
+
+# --------------------------------------------------------------------------
+# analyze(reuse=) validation (the silently-wrong-factors bugfix)
+# --------------------------------------------------------------------------
+def test_reuse_pattern_mismatch_raises():
+    Ac, _, _ = _case("circuit")
+    B, _, _ = _case("banded")
+    an = analyze(Ac)
+    with pytest.raises(ValueError, match="different sparsity pattern"):
+        analyze(B, reuse=an)
+
+
+def test_reuse_same_pattern_still_works():
+    """The documented reuse flow — same matrix, different kernel mode —
+    must keep working and still solve correctly."""
+    Ac, _, _ = _case("circuit")
+    an = analyze(Ac)
+    an2 = analyze(Ac, HyluOptions(force_mode="hybrid"), reuse=an)
+    assert an2.choice.mode == "hybrid"
+    assert an2.p is an.p                      # ordering actually reused
+    rng = np.random.default_rng(3)
+    b = rng.normal(size=Ac.n)
+    x, info = solve(factor(an2, Ac), b)
+    assert info["residual"] < 1e-10
+
+
+# --------------------------------------------------------------------------
+# cache semantics
+# --------------------------------------------------------------------------
+def test_memory_hit_returns_same_analysis_and_skips_analyze(tmp_path):
+    Ac, vb, bb = _case()
+    cache = PlanCache(directory=str(tmp_path))
+    an = cache.get_or_analyze(Ac, HyluOptions())
+    assert cache.stats["misses"] == 1 and cache.stats["analyze_calls"] == 1
+    an2 = cache.get_or_analyze(Ac, HyluOptions())
+    assert an2 is an                          # same object ⇒ shared jit cache
+    assert cache.stats["hits"] == 1
+    assert cache.stats["analyze_calls"] == 1  # the analyze phase was skipped
+
+
+def test_memory_hit_honors_callers_runtime_options(tmp_path):
+    """Runtime-only knobs (engine/mesh/donate/refine) share a fingerprint,
+    but a hit must come back bound to the CALLER's options — same shared
+    plan arrays and jit_cache, different opts view (consistent with the
+    disk-hit path, which loads under the caller's opts)."""
+    Ac, _, _ = _case()
+    cache = PlanCache(directory=str(tmp_path))
+    an = cache.get_or_analyze(Ac, HyluOptions())
+    o2 = HyluOptions(engine="jax", refine_tol=1e-3, refine_max_iter=0)
+    an2 = cache.get_or_analyze(Ac, o2)
+    assert cache.stats["hits"] == 1 and cache.stats["analyze_calls"] == 1
+    assert an2.opts is o2                      # caller's runtime config wins
+    assert an.opts.refine_tol == 1e-12         # first caller's view intact
+    assert an2.fingerprint == an.fingerprint
+    assert an2.plan is an.plan                 # artifact shared, not copied
+    assert an2.jit_cache is an.jit_cache       # compiled engines shared
+
+
+def test_corrupt_artifact_falls_back_to_analyze(tmp_path):
+    """A truncated/non-zip file at the artifact path (disk corruption) is
+    a miss, not a crash."""
+    Ac, _, _ = _case()
+    cache = PlanCache(directory=str(tmp_path))
+    fp = cache.fingerprint(Ac, HyluOptions())
+    os.makedirs(str(tmp_path), exist_ok=True)
+    with open(cache.path_for(fp), "wb") as f:
+        f.write(b"PK\x03\x04 truncated garbage")
+    with pytest.raises(PlanCacheFormatError):
+        load_analysis(cache.path_for(fp))
+    an = cache.get_or_analyze(Ac, HyluOptions())
+    assert an.fingerprint == fp
+    assert cache.stats["analyze_calls"] == 1 and cache.stats["disk_hits"] == 0
+
+
+def test_distinct_options_are_distinct_entries(tmp_path):
+    Ac, _, _ = _case()
+    cache = PlanCache(directory=str(tmp_path))
+    an_r = cache.get_or_analyze(Ac, HyluOptions(force_mode="rowrow"))
+    an_h = cache.get_or_analyze(Ac, HyluOptions(force_mode="hybrid"))
+    assert an_r is not an_h
+    assert an_r.fingerprint != an_h.fingerprint
+    assert len(cache) == 2 and cache.stats["analyze_calls"] == 2
+
+
+def test_lru_eviction(tmp_path):
+    cache = PlanCache(capacity=2, directory=None)
+    mats = [_case(name, n=36)[0]
+            for name in ("circuit", "banded", "denseish")]
+    fps = [cache.get_or_analyze(a, HyluOptions()).fingerprint for a in mats]
+    assert len(cache) == 2 and cache.stats["evictions"] == 1
+    assert fps[0] not in cache                # oldest evicted
+    assert fps[1] in cache and fps[2] in cache
+    cache.get_or_analyze(mats[1], HyluOptions())   # refresh recency of [1]
+    cache.get_or_analyze(mats[0], HyluOptions())   # re-analyze [0] → evict [2]
+    assert fps[2] not in cache and fps[1] in cache
+
+
+def test_no_directory_means_no_disk(tmp_path):
+    Ac, _, _ = _case()
+    cache = PlanCache(directory=None)
+    cache.get_or_analyze(Ac, HyluOptions())
+    assert cache.stats["saves"] == 0
+    assert cache.path_for("deadbeef") is None
+
+
+# --------------------------------------------------------------------------
+# disk persistence
+# --------------------------------------------------------------------------
+def test_disk_round_trip_bit_identical_solve(tmp_path):
+    Ac, vb, bb = _case("circuit", n=48, k=4)
+    opts = HyluOptions()
+    cache = PlanCache(directory=str(tmp_path))
+    an = cache.get_or_analyze(Ac, opts)
+    x0, info0 = solve_batched(factor_batched(an, Ac, vb), bb)
+
+    fresh = PlanCache(directory=str(tmp_path))
+    an2 = fresh.get_or_analyze(Ac, opts)
+    assert fresh.stats["disk_hits"] == 1
+    assert fresh.stats["analyze_calls"] == 0   # host analyze phase skipped
+    assert "load" in an2.timings and "matching" not in an2.timings
+    # the loaded artifact is structurally equal…
+    np.testing.assert_array_equal(an2.p, an.p)
+    np.testing.assert_array_equal(an2.q, an.q)
+    np.testing.assert_array_equal(an2.src_map, an.src_map)
+    np.testing.assert_array_equal(an2.scale_map, an.scale_map)
+    np.testing.assert_array_equal(an2.plan.a_scatter, an.plan.a_scatter)
+    assert an2.choice.mode == an.choice.mode
+    assert [len(nd.edges) for nd in an2.plan.nodes] == \
+        [len(nd.edges) for nd in an.plan.nodes]
+    # …and solves bit-identically (asserted ≤1e-10, observed 0.0)
+    x1, info1 = solve_batched(factor_batched(an2, Ac, vb), bb)
+    assert np.abs(x1 - x0).max() <= 1e-10
+    assert np.abs(info1["residual"] - info0["residual"]).max() <= 1e-10
+    assert np.abs(x1 - x0).max() == 0.0
+
+
+@pytest.mark.parametrize("name", ["banded", "denseish"])
+def test_disk_round_trip_other_scenarios(tmp_path, name):
+    Ac, vb, bb = _case(name, n=36, k=2)
+    opts = HyluOptions()
+    an = analyze(Ac, opts)
+    path = save_analysis(an, str(tmp_path / "art.npz"))
+    an2 = load_analysis(path, opts=opts, expected_fingerprint=an.fingerprint)
+    x0, _ = solve_batched(factor_batched(an, Ac, vb), bb)
+    x1, _ = solve_batched(factor_batched(an2, Ac, vb), bb)
+    assert np.abs(x1 - x0).max() == 0.0
+
+
+def test_version_and_fingerprint_guards(tmp_path):
+    Ac, _, _ = _case()
+    opts = HyluOptions()
+    an = analyze(Ac, opts)
+    path = save_analysis(an, str(tmp_path / "art.npz"))
+    with pytest.raises(PlanCacheFormatError, match="does not match"):
+        load_analysis(path, opts=opts, expected_fingerprint="0" * 64)
+    with pytest.raises(PlanCacheFormatError, match="plan options"):
+        load_analysis(path, opts=HyluOptions(force_mode="hybrid"))
+    # tamper the version: the cache must fall back to a clean re-analyze
+    z = np.load(path, allow_pickle=False)
+    meta = json.loads(str(z["meta"][()]))
+    meta["format_version"] = FORMAT_VERSION + 1
+    arrays = {name: z[name] for name in z.files if name != "meta"}
+    fp = an.fingerprint
+    bad_path = str(tmp_path / f"{fp}.npz")
+    np.savez_compressed(bad_path, meta=json.dumps(meta), **arrays)
+    with pytest.raises(PlanCacheFormatError, match="format version"):
+        load_analysis(bad_path, opts=opts)
+    cache = PlanCache(directory=str(tmp_path))
+    an2 = cache.get_or_analyze(Ac, opts)      # untrusted file → re-analyze
+    assert cache.stats["analyze_calls"] == 1
+    assert cache.stats["disk_hits"] == 0
+    assert an2.fingerprint == fp
+
+
+def test_invalidate(tmp_path):
+    Ac, _, _ = _case()
+    cache = PlanCache(directory=str(tmp_path))
+    an = cache.get_or_analyze(Ac, HyluOptions())
+    fp = an.fingerprint
+    cache.invalidate(fp, disk=True)
+    assert fp not in cache
+    assert not os.path.exists(cache.path_for(fp))
+    cache.get_or_analyze(Ac, HyluOptions())
+    assert cache.stats["analyze_calls"] == 2
+
+
+# --------------------------------------------------------------------------
+# fresh-process round trip: save here, reload + solve in a subprocess,
+# compare the solution byte-for-byte
+# --------------------------------------------------------------------------
+_SUBPROCESS_CODE = """
+import numpy as np
+import jax
+jax.config.update("jax_enable_x64", True)
+import sys
+sys.path.insert(0, "tests")
+from helpers import scenario_system
+from repro.core import HyluOptions
+from repro.core.api import factor_batched, solve_batched
+from repro.core.plan_cache import PlanCache
+
+Ac, _, _, _ = scenario_system("circuit", n=48, seed=0)
+rng = np.random.default_rng(7)
+vb = Ac.data[None, :] * rng.uniform(0.9, 1.1, (4, Ac.nnz))
+bb = rng.normal(size=(4, Ac.n))
+cache = PlanCache(directory={cache_dir!r})
+an = cache.get_or_analyze(Ac, HyluOptions())
+assert cache.stats["disk_hits"] == 1, cache.stats
+assert cache.stats["analyze_calls"] == 0, cache.stats   # analyze skipped
+x, info = solve_batched(factor_batched(an, Ac, vb), bb)
+print("XHASH", x.tobytes().hex()[:64], np.abs(x).sum())
+print("SUBPROCESS_PLAN_CACHE_OK")
+"""
+
+
+def test_persistence_round_trip_subprocess(tmp_path):
+    """save → reload in a fresh subprocess → bit-identical solve, with the
+    analyze phase skipped (counter-asserted)."""
+    Ac, _, _, _ = scenario_system("circuit", n=48, seed=0)
+    rng = np.random.default_rng(7)
+    vb = Ac.data[None, :] * rng.uniform(0.9, 1.1, (4, Ac.nnz))
+    bb = rng.normal(size=(4, Ac.n))
+    cache = PlanCache(directory=str(tmp_path))
+    an = cache.get_or_analyze(Ac, HyluOptions())
+    x0, _ = solve_batched(factor_batched(an, Ac, vb), bb)
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run(
+        [sys.executable, "-c",
+         _SUBPROCESS_CODE.format(cache_dir=str(tmp_path))],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert "SUBPROCESS_PLAN_CACHE_OK" in r.stdout, (r.stdout[-2000:],
+                                                    r.stderr[-4000:])
+    xhash = [ln for ln in r.stdout.splitlines()
+             if ln.startswith("XHASH")][0].split()[1]
+    assert xhash == x0.tobytes().hex()[:64]    # byte-for-byte identical

@@ -1,0 +1,238 @@
+"""SolverService suite: the mixed-pattern serving dispatcher.
+
+Covers: an interleaved stream of ≥3 distinct sparsity patterns solved
+through one service with per-request results bit-identical to dispatching
+each pattern group through the batched engine directly; warm-stream
+plan-cache hits (the analyze phase is counter-asserted skipped); chunked
+dispatch at a fixed batch_size (one compiled program per pattern); multi-
+RHS and mixed-RHS-shape traffic; kernel-mode routing end-to-end at routing
+scale (circuit→rowrow, banded/denseish→hybrid through the service); and a
+disk-warm second service instance."""
+import numpy as np
+import pytest
+
+from repro.core import CSR, HyluOptions
+from repro.core.api import factor_batched, solve_batched, plan_fingerprint
+from repro.core.plan_cache import PlanCache
+from repro.serve.solver_service import (SolverService, SolveRequest,
+                                        SolveResult)
+
+from tests.helpers import SCENARIOS, scenario_system, routing_system
+
+STREAM = ["circuit", "banded", "denseish", "singleton"]
+
+
+def _mixed_stream(reps=3, n=36, seed=0):
+    """Interleaved requests over ≥3 distinct patterns, with per-request
+    value drift; returns (requests, per_pattern_indices).  ``seed`` drifts
+    the values/RHS only — the patterns are fixed, so streams with
+    different seeds hit the same plan-cache entries."""
+    rng = np.random.default_rng(seed)
+    pats = {name: scenario_system(name, n=n, seed=0)[0]
+            for name in STREAM}
+    reqs, per_pattern = [], {}
+    for rep in range(reps):
+        for name in STREAM:
+            Ac = pats[name]
+            vals = Ac.data * rng.uniform(0.9, 1.1, Ac.nnz)
+            reqs.append(SolveRequest(
+                a=CSR(Ac.n, Ac.indptr, Ac.indices, vals),
+                b=rng.normal(size=Ac.n), tag=(name, rep)))
+            per_pattern.setdefault(name, []).append(len(reqs) - 1)
+    return reqs, per_pattern
+
+
+def test_mixed_stream_residuals_and_bit_identity(tmp_path):
+    """≥3 distinct patterns interleaved: per-request residual at target,
+    and x bit-identical to the single-pattern batched engine fed the same
+    group (asserted ≤1e-10, observed 0.0)."""
+    svc = SolverService(cache_dir=str(tmp_path), batch_size=4)
+    reqs, per_pattern = _mixed_stream(reps=3)
+    assert len(per_pattern) >= 3
+    res = svc.solve_batch(reqs)
+    assert len(res) == len(reqs)
+    for r, req in zip(res, reqs):
+        assert isinstance(r, SolveResult)
+        assert r.tag == req.tag               # results in request order
+        assert r.residual < 1e-10, r.tag
+    assert svc.stats["patterns_seen"] == len(STREAM)
+    # bit-identity against direct per-pattern dispatch (same group order,
+    # same padding discipline as the service's batch_size=4 chunks)
+    for name, idxs in per_pattern.items():
+        a0 = reqs[idxs[0]].a
+        an = svc.cache.get_or_analyze(a0, svc.opts)
+        vb = np.stack([reqs[i].a.data for i in idxs] + [reqs[idxs[0]].a.data])
+        bb = np.stack([reqs[i].b for i in idxs] + [np.zeros(a0.n)])
+        x, _ = solve_batched(factor_batched(an, a0, vb), bb)
+        for j, i in enumerate(idxs):
+            assert np.abs(res[i].x - x[j]).max() <= 1e-10, (name, j)
+            assert np.abs(res[i].x - x[j]).max() == 0.0, (name, j)
+
+
+def test_results_match_scalar_solver(tmp_path):
+    """Each request's x also matches the scalar analyze/factor/solve path
+    to solver accuracy (different refinement trajectory ⇒ not bit-equal)."""
+    from repro.core.api import analyze, factor, solve
+
+    svc = SolverService(cache_dir=str(tmp_path), batch_size=4)
+    reqs, _ = _mixed_stream(reps=1)
+    res = svc.solve_batch(reqs)
+    for r, req in zip(res, reqs):
+        x_ref, info = solve(factor(analyze(req.a), req.a), req.b)
+        assert np.abs(r.x - x_ref).max() < 1e-8, r.tag
+
+
+def test_warm_stream_skips_analyze(tmp_path):
+    """Second traffic window over the same patterns: plan-cache memory
+    hits, zero new analyze calls (the counter IS the phase-skip assert)."""
+    svc = SolverService(cache_dir=str(tmp_path), batch_size=4)
+    reqs, _ = _mixed_stream(reps=1, seed=0)
+    svc.solve_batch(reqs)
+    n_analyze = svc.cache.stats["analyze_calls"]
+    assert n_analyze == len(STREAM)
+    reqs2, _ = _mixed_stream(reps=2, seed=99)     # new values, same patterns
+    res2 = svc.solve_batch(reqs2)
+    assert svc.cache.stats["analyze_calls"] == n_analyze
+    assert svc.cache.stats["hits"] >= len(STREAM)
+    for r in res2:
+        assert r.residual < 1e-10
+
+
+def test_disk_warm_second_service(tmp_path):
+    """A fresh service over the same artifact store loads every plan from
+    checkpoints/ (disk hits), skips analyze entirely, and returns
+    bit-identical results."""
+    svc = SolverService(cache_dir=str(tmp_path), batch_size=4)
+    reqs, _ = _mixed_stream(reps=1)
+    res1 = svc.solve_batch(reqs)
+
+    svc2 = SolverService(cache_dir=str(tmp_path), batch_size=4)
+    res2 = svc2.solve_batch(reqs)
+    assert svc2.cache.stats["analyze_calls"] == 0
+    assert svc2.cache.stats["disk_hits"] == len(STREAM)
+    for r1, r2 in zip(res1, res2):
+        assert np.abs(r1.x - r2.x).max() == 0.0
+
+
+def test_batch_size_chunking_and_padding(tmp_path):
+    """5 same-pattern requests at batch_size=2 → 3 dispatches, 1 padded
+    system, correct per-request results."""
+    svc = SolverService(cache_dir=str(tmp_path), batch_size=2)
+    rng = np.random.default_rng(5)
+    Ac, _, _, _ = scenario_system("circuit", n=36, seed=5)
+    reqs = [SolveRequest(a=CSR(Ac.n, Ac.indptr, Ac.indices,
+                               Ac.data * rng.uniform(0.9, 1.1, Ac.nnz)),
+                         b=rng.normal(size=Ac.n), tag=i) for i in range(5)]
+    res = svc.solve_batch(reqs)
+    assert svc.stats["dispatches"] == 3
+    assert svc.stats["padded_systems"] == 1
+    assert svc.stats["groups"] == 1
+    for i, r in enumerate(res):
+        assert r.tag == i and r.residual < 1e-10 and r.group_size == 5
+    # every chunk reused ONE compiled batched program (padded to K=2)
+    an = svc.cache.get_or_analyze(reqs[0].a, svc.opts)
+    assert len(an.jit_cache) == 1
+
+
+def test_multirhs_and_mixed_shapes(tmp_path):
+    """(n,) and (n, m) requests of one pattern dispatch as separate
+    rectangular groups; multi-RHS residuals are per-column."""
+    svc = SolverService(cache_dir=str(tmp_path), batch_size=4)
+    rng = np.random.default_rng(11)
+    Ac, _, _, _ = scenario_system("circuit", n=36, seed=11)
+    reqs = [SolveRequest(a=Ac, b=rng.normal(size=Ac.n), tag="vec"),
+            SolveRequest(a=Ac, b=rng.normal(size=(Ac.n, 3)), tag="multi")]
+    res = svc.solve_batch(reqs)
+    assert svc.stats["groups"] == 2
+    assert res[0].x.shape == (Ac.n,) and np.ndim(res[0].residual) == 0
+    assert res[1].x.shape == (Ac.n, 3)
+    assert np.asarray(res[1].residual).shape == (3,)
+    assert float(np.max(res[1].residual)) < 1e-10
+
+
+def test_submit_flush_and_pairs(tmp_path):
+    svc = SolverService(cache_dir=str(tmp_path), batch_size=4)
+    rng = np.random.default_rng(2)
+    Ac, _, b, _ = scenario_system("circuit", n=36, seed=2)
+    assert svc.submit(Ac, b, tag="q0") == 0
+    assert svc.submit(Ac, rng.normal(size=Ac.n)) == 1
+    res = svc.flush()
+    assert len(res) == 2 and res[0].tag == "q0"
+    assert svc._pending == []
+    # bare (a, b) pairs are accepted by solve_batch
+    res2 = svc.solve_batch([(Ac, b)])
+    assert res2[0].residual < 1e-10
+
+
+def test_bad_requests_raise(tmp_path):
+    svc = SolverService(cache_dir=str(tmp_path))
+    Ac, _, b, _ = scenario_system("circuit", n=36, seed=0)
+    with pytest.raises(ValueError, match="RHS shape"):
+        svc.solve_batch([SolveRequest(a=Ac, b=np.zeros(Ac.n + 1))])
+    with pytest.raises(TypeError, match="CSR"):
+        svc.solve_batch([SolveRequest(a=np.eye(3), b=np.zeros(3))])
+    with pytest.raises(ValueError, match="batch_size"):
+        SolverService(batch_size=0)
+
+
+def test_flush_keeps_queue_on_validation_error(tmp_path):
+    """One malformed request must not discard the rest of the window: a
+    failed flush leaves everything queued for a corrected retry."""
+    svc = SolverService(cache_dir=str(tmp_path), batch_size=4)
+    Ac, _, b, _ = scenario_system("circuit", n=36, seed=0)
+    svc.submit(Ac, b, tag="good")
+    svc.submit(Ac, np.zeros(Ac.n + 1), tag="bad")
+    with pytest.raises(ValueError, match="RHS shape"):
+        svc.flush()
+    assert len(svc._pending) == 2              # nothing silently lost
+    svc._pending.pop()                         # drop the malformed one
+    res = svc.flush()
+    assert len(res) == 1 and res[0].tag == "good"
+    assert res[0].residual < 1e-10
+    assert svc._pending == []
+
+
+def test_shared_cache_across_services(tmp_path):
+    """Two services sharing one PlanCache share analyses and engines."""
+    cache = PlanCache(directory=str(tmp_path))
+    s1 = SolverService(cache=cache, batch_size=2)
+    s2 = SolverService(cache=cache, batch_size=2)
+    Ac, _, b, _ = scenario_system("circuit", n=36, seed=0)
+    s1.solve_batch([(Ac, b)])
+    s2.solve_batch([(Ac, b)])
+    assert cache.stats["analyze_calls"] == 1
+    assert cache.stats["hits"] == 1
+
+
+# --------------------------------------------------------------------------
+# kernel-mode routing end-to-end (at routing scale): the scenario
+# generators really land on their intended kernels through the service
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("name,expected", [("circuit", "rowrow"),
+                                           ("banded", "hybrid"),
+                                           ("denseish", "hybrid")])
+def test_service_routes_kernel_modes_end_to_end(tmp_path, name, expected):
+    Ac, b, expected2 = routing_system(name, seed=0)
+    assert expected2 == expected == SCENARIOS[name][2]
+    svc = SolverService(cache_dir=str(tmp_path), batch_size=2)
+    res = svc.solve_batch([(Ac, b)])
+    assert res[0].residual < 1e-10
+    fp = plan_fingerprint(Ac, svc.opts)
+    assert svc.pattern_modes[fp] == expected
+
+
+def test_force_mode_wins_through_service(tmp_path):
+    """force_mode overrides routing through the whole serving stack, and
+    the forced-mode entry is a distinct fingerprint from the routed one."""
+    Ac, _, b, _ = scenario_system("circuit", n=36, seed=0)
+    routed = SolverService(cache_dir=str(tmp_path), batch_size=2)
+    forced = SolverService(opts=HyluOptions(force_mode="supernodal"),
+                           cache=routed.cache, batch_size=2)
+    r0 = routed.solve_batch([(Ac, b)])[0]
+    r1 = forced.solve_batch([(Ac, b)])[0]
+    assert r0.fingerprint != r1.fingerprint
+    assert routed.pattern_modes[r0.fingerprint] == "rowrow"
+    assert forced.pattern_modes[r1.fingerprint] == "supernodal"
+    assert routed.cache.stats["analyze_calls"] == 2
+    assert r1.residual < 1e-10
+    assert np.abs(r0.x - r1.x).max() < 1e-8   # same solution, different plan

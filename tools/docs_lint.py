@@ -6,7 +6,11 @@ Checks, repo-relative:
      target heading exists (GitHub-style slugs);
   2. every ``HyluOptions`` field is documented in docs/API.md (the options
      table must not rot as knobs are added);
-  3. the three core docs exist and are linked from README.md.
+  3. the three core docs exist and are linked from README.md;
+  4. the serving stack's public options stay documented in docs/API.md:
+     every ``PlanCache``/``SolverService`` constructor parameter, every
+     ``SolveRequest``/``SolveResult`` field, and every plan-fingerprint
+     option field (``PLAN_OPTION_FIELDS``).
 
     PYTHONPATH=src python tools/docs_lint.py
 """
@@ -77,6 +81,39 @@ def check_options_documented() -> list:
             if f"`{f.name}`" not in text]
 
 
+def check_serving_documented() -> list:
+    """Plan-cache + serving public surface: constructor params, result
+    fields and the fingerprint option list must appear in docs/API.md."""
+    import inspect
+
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    from repro.core.options import PLAN_OPTION_FIELDS
+    from repro.core.plan_cache import PlanCache
+    from repro.serve.solver_service import (SolverService, SolveRequest,
+                                            SolveResult)
+
+    with open(os.path.join(REPO, "docs/API.md"), encoding="utf-8") as f:
+        text = f.read()
+    errors = []
+    for cls in (PlanCache, SolverService, SolveRequest, SolveResult):
+        if f"`{cls.__name__}`" not in text:
+            errors.append(f"docs/API.md: class `{cls.__name__}` "
+                          "undocumented")
+    named = {
+        "PlanCache": [f.name for f in dataclasses.fields(PlanCache)],
+        "SolverService": [p for p in inspect.signature(
+            SolverService.__init__).parameters if p != "self"],
+        "SolveRequest": [f.name for f in dataclasses.fields(SolveRequest)],
+        "SolveResult": [f.name for f in dataclasses.fields(SolveResult)],
+        "PLAN_OPTION_FIELDS": list(PLAN_OPTION_FIELDS),
+    }
+    for owner, names in named.items():
+        errors.extend(
+            f"docs/API.md: {owner} option/field `{n}` undocumented"
+            for n in names if f"`{n}`" not in text)
+    return errors
+
+
 def check_readme_links_docs() -> list:
     with open(os.path.join(REPO, "README.md"), encoding="utf-8") as f:
         text = f.read()
@@ -86,12 +123,13 @@ def check_readme_links_docs() -> list:
 
 def main() -> int:
     errors = check_links() + check_options_documented() \
-        + check_readme_links_docs()
+        + check_serving_documented() + check_readme_links_docs()
     for e in errors:
         print(f"docs-lint: {e}", file=sys.stderr)
     if not errors:
         n = len(DOC_FILES)
-        print(f"docs-lint: OK ({n} files, all links + HyluOptions fields)")
+        print(f"docs-lint: OK ({n} files, all links + HyluOptions fields "
+              "+ plan-cache/serving surface)")
     return 1 if errors else 0
 
 

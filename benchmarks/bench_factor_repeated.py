@@ -322,6 +322,148 @@ def bench_serving(k_per_pattern=8, reps=2, batch_size=8, cache_root=None):
     return rec
 
 
+def _peak_rss_mb() -> float:
+    """Process high-water resident set in MB (linux ru_maxrss is KB).
+    Monotone — per-phase snapshots record the watermark *after* each
+    phase, so ``phase_peaks[p]`` is "the largest the process ever got up
+    to and including p", and the increments attribute growth to phases."""
+    import resource
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def bench_corpus_entry(entry, k=4, amalg_fill_tol=0.2, cache_root=None):
+    """One corpus matrix through the scale lane: analyze (amalgamation on)
+    + bucketed-schedule build + batched-engine compile + steady-state
+    batched refactor + fused solve, recording runtime, the peak-RSS
+    watermark after every phase, the plan's deterministic byte accounting
+    (``memory_stats``) and the pad-waste / bulk-coverage numbers that
+    drive sub-bucket tuning.  ``analyze_only`` entries stop after the
+    schedule build (past the XLA compile budget)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import HyluOptions
+    from repro.core.plan import plan_stats
+
+    try:
+        from . import corpus as corpus_mod
+    except ImportError:
+        import corpus as corpus_mod
+
+    peaks = {"start": _peak_rss_mb()}
+    t0 = time.perf_counter()
+    Ac, _, meta = corpus_mod.load_entry(entry, root=cache_root)
+    load_s = time.perf_counter() - t0
+    peaks["load"] = _peak_rss_mb()
+
+    opts = HyluOptions(amalg_fill_tol=amalg_fill_tol,
+                       orderings=("natural", "min_degree"))
+    t0 = time.perf_counter()
+    an = analyze(Ac, opts)
+    analyze_s = time.perf_counter() - t0
+    peaks["analyze"] = _peak_rss_mb()
+
+    t0 = time.perf_counter()
+    ps = plan_stats(an.plan, bulk_min_width=opts.bulk_min_width)
+    schedule_s = time.perf_counter() - t0
+    peaks["schedule"] = _peak_rss_mb()
+
+    amalg = an.choice.stats.get("amalg", {})
+    rec = dict(
+        meta=meta, k=k, mode=an.choice.mode, ordering=an.ordering_name,
+        amalg_fill_tol=amalg_fill_tol, amalg=amalg,
+        load_s=load_s, analyze_s=analyze_s, schedule_s=schedule_s,
+        analyze_timings={name: round(v, 4)
+                         for name, v in an.timings.items()},
+        plan=dict(n_nodes=ps["n_nodes"], n_levels=ps["n_levels"],
+                  n_scanned_levels=ps.get("n_scanned_levels"),
+                  total_slots=ps["total_slots"],
+                  pad_waste_frac=ps.get("pad_waste_frac"),
+                  bulk_node_coverage=ps.get("bulk_node_coverage"),
+                  mean_panel_width=ps["mean_panel_width"]),
+        memory_bytes={f: ps[f] for f in
+                      ("panel_bytes", "workspace_bytes",
+                       "schedule_index_bytes", "batched_bytes",
+                       "total_bytes") if f in ps},
+    )
+    if entry.analyze_only:
+        rec["peak_rss_mb"] = {p: round(v, 1) for p, v in peaks.items()}
+        print(f"[large] {entry.name:14s} n={meta['n']:6d} "
+              f"({meta['source']}) analyze={analyze_s:6.1f}s "
+              f"schedule={schedule_s:5.1f}s nodes={ps['n_nodes']} "
+              f"levels={ps['n_levels']} ANALYZE-ONLY "
+              f"peakRSS={peaks['schedule']:.0f}MB", flush=True)
+        return rec
+
+    rng = np.random.default_rng(0)
+    vb = _value_drift(Ac.data, k, rng)
+    bb = rng.normal(size=(k, Ac.n))
+    t0 = time.perf_counter()
+    bst = factor_batched(an, Ac, vb)              # batched refactor compile
+    x, info = solve_batched(bst, bb)              # fused solve compile
+    compile_s = time.perf_counter() - t0
+    peaks["compile"] = _peak_rss_mb()
+    worst = float(np.max(info["residual"]))
+    assert worst < 1e-8, (entry.name, worst)
+
+    t0 = time.perf_counter()
+    bst = factor_batched(an, Ac, vb)              # steady-state refactor
+    refac_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    x, info = solve_batched(bst, bb)
+    solve_s = time.perf_counter() - t0
+    peaks["run"] = _peak_rss_mb()
+
+    eng = jax_repeated_engine(an)
+    rec.update(
+        compile_s=compile_s, refac_batched_s=refac_s, solve_fused_s=solve_s,
+        refac_systems_per_s=k / refac_s, worst_residual=worst,
+        engine_memory_bytes=eng.memory_stats(k=k),
+        peak_rss_mb={p: round(v, 1) for p, v in peaks.items()},
+    )
+    print(f"[large] {entry.name:14s} n={meta['n']:6d} ({meta['source']}) "
+          f"analyze={analyze_s:6.1f}s compile={compile_s:6.1f}s "
+          f"refac={refac_s:6.2f}s solve={solve_s:5.2f}s "
+          f"padwaste={ps.get('pad_waste_frac', 0):.2f} "
+          f"amalg {amalg.get('n_nodes_before', ps['n_nodes'])}->"
+          f"{amalg.get('n_nodes_after', ps['n_nodes'])} "
+          f"peakRSS={peaks['run']:.0f}MB resid={worst:.1e}", flush=True)
+    return rec
+
+
+def bench_corpus(k=4, smoke=False, amalg_fill_tol=0.2, cache_root=None):
+    """The ``--large`` scale lane: the SuiteSparse-class corpus
+    (real matrices when reachable, statistics-matched synthetic stand-ins
+    offline) end-to-end with amalgamation on.  ``smoke`` restricts to the
+    CI subset (one circuit-class + one FEM-class matrix at n>=10^4)."""
+    try:
+        from . import corpus as corpus_mod
+    except ImportError:
+        import corpus as corpus_mod
+
+    entries = (corpus_mod.smoke_corpus() if smoke else corpus_mod.corpus())
+    recs = {}
+    for entry in entries:
+        recs[entry.name] = bench_corpus_entry(
+            entry, k=k, amalg_fill_tol=amalg_fill_tol, cache_root=cache_root)
+    full = [r for r in recs.values() if "refac_batched_s" in r]
+    return dict(
+        smoke=bool(smoke), amalg_fill_tol=amalg_fill_tol,
+        matrices=recs,
+        geomean=dict(
+            analyze_s=_geomean([r["analyze_s"] for r in recs.values()]),
+            compile_s=_geomean([r["compile_s"] for r in full]),
+            refac_batched_s=_geomean([r["refac_batched_s"] for r in full]),
+            pad_waste_frac=_geomean(
+                [r["plan"]["pad_waste_frac"] for r in recs.values()
+                 if r["plan"].get("pad_waste_frac")]),
+        ),
+        peak_rss_mb=max((r["peak_rss_mb"].get("run",
+                                              r["peak_rss_mb"]["schedule"])
+                         for r in recs.values()), default=0.0),
+    )
+
+
 def suite(quick=False, large=False):
     if quick:
         return [("circuit_150", CSR.from_scipy(matrices.circuit_like(150, 1)
@@ -407,7 +549,20 @@ def compile_table(records) -> str:
 
 def bench_repeated(k=32, quick=False, large=False,
                    out_path="BENCH_repeated.json", jax_cache=None,
-                   jax_cache_warm=False, devices=None, serving=True):
+                   jax_cache_warm=False, devices=None, serving=True,
+                   large_smoke=False, large_only=False, large_k=4,
+                   amalg_tol=0.2):
+    if large_only:
+        # the CI scale lane: just the corpus section, skipping the main
+        # suite entirely (the scale job budget is the corpus' budget)
+        out = dict(k=k, jax_compilation_cache=jax_cache or None,
+                   jax_cache_warm=bool(jax_cache_warm),
+                   large=bench_corpus(k=large_k, smoke=large_smoke,
+                                      amalg_fill_tol=amalg_tol))
+        with open(out_path, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"results → {out_path}")
+        return out
     records = {}
     analyze_records = {}
     mats = suite(quick=quick, large=large)
@@ -465,6 +620,12 @@ def bench_repeated(k=32, quick=False, large=False,
         # device count; bit-exact parity is the test suite's job)
         name0, Ac0 = mats[0]
         out["devices_sweep"] = bench_devices_sweep(name0, Ac0, k, devices)
+    if large:
+        # the scale trajectory: the SuiteSparse-class corpus at n>=10^4
+        # with amalgamation on — runtime + peak-memory + pad-waste per
+        # matrix, so scale regressions surface like speed regressions
+        out["large"] = bench_corpus(k=large_k, smoke=large_smoke,
+                                    amalg_fill_tol=amalg_tol)
     with open(out_path, "w") as f:
         json.dump(out, f, indent=1)
     table = compile_table(records)
@@ -490,7 +651,23 @@ def main(argv=None):
     ap.add_argument("--k", type=int, default=32)
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--large", action="store_true",
-                    help="add the circuit_2000-scale matrices")
+                    help="add the circuit_2000-scale matrices AND run the "
+                         "SuiteSparse-class corpus lane (the `large` "
+                         "section: runtime + peak memory + pad waste at "
+                         "n>=10^4, amalgamation on)")
+    ap.add_argument("--large-smoke", action="store_true",
+                    help="restrict the corpus lane to the CI scale-smoke "
+                         "subset (one circuit-class + one FEM-class "
+                         "matrix at n>=10^4)")
+    ap.add_argument("--large-only", action="store_true",
+                    help="run ONLY the corpus lane (the CI scale job), "
+                         "skipping the main repeated-solve suite")
+    ap.add_argument("--large-k", type=int, default=4,
+                    help="system-batch size for the corpus lane's batched "
+                         "refactor (smaller than --k: n>=10^4 systems)")
+    ap.add_argument("--amalg-tol", type=float, default=0.2,
+                    help="amalgamation fill tolerance for the corpus lane "
+                         "(HyluOptions.amalg_fill_tol)")
     ap.add_argument("--out", default="BENCH_repeated.json")
     ap.add_argument("--jax-cache", default=None, metavar="DIR",
                     help="persistent JAX compilation cache dir "
@@ -519,7 +696,9 @@ def main(argv=None):
               f"({'warm' if warm else 'cold'})")
     bench_repeated(k=args.k, quick=args.quick, large=args.large,
                    out_path=args.out, jax_cache=cache, jax_cache_warm=warm,
-                   devices=args.devices, serving=not args.no_serving)
+                   devices=args.devices, serving=not args.no_serving,
+                   large_smoke=args.large_smoke, large_only=args.large_only,
+                   large_k=args.large_k, amalg_tol=args.amalg_tol)
     return 0
 
 

@@ -1,0 +1,214 @@
+"""SuiteSparse-class corpus harness: real matrices when reachable,
+statistics-matched synthetic stand-ins when not.
+
+The paper's headline numbers (2.36-2.90x geomean over PARDISO) come from
+37 real SuiteSparse matrices; our repeated-solve suite tops out at
+synthetic n=2000.  This module is the bridge to that scale:
+
+* a registry of real SuiteSparse matrices in the n=10^4-10^5 range
+  (circuit / power-grid / FEM classes — the regimes HYLU routes between),
+  downloaded from sparse.tamu.edu and cached under the shared artifact
+  root (``$HYLU_CACHE_ROOT`` / ``<repo>/checkpoints`` — same resolution
+  as the plan cache, so CI caches one directory);
+* deterministic synthetic fallbacks per entry, built from
+  :mod:`matrices`' class generators at matched size/density, so the
+  ``--large`` bench lane runs the SAME corpus names online and offline —
+  offline runs degrade to the stand-in, never skip silently;
+* ``matrix_stats`` — the sparsity statistics the stand-ins are matched
+  on (size, density, pattern-symmetry fraction, degree profile), recorded
+  next to every bench record so a synthetic run is auditable against the
+  real matrix it stands in for.
+
+    PYTHONPATH=src:benchmarks python -c "import corpus; corpus.main()"
+
+prints the corpus with per-entry stats and their source.
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import os
+import tarfile
+import urllib.request
+
+import numpy as np
+import scipy.sparse as sp
+
+try:                                  # package context (python -m benchmarks.*)
+    from .matrices import circuit_like, powergrid_like, fem2d, fem3d
+except ImportError:                   # flat context (PYTHONPATH=benchmarks)
+    from matrices import circuit_like, powergrid_like, fem2d, fem3d
+from repro.core.matrix import CSR
+
+SUITESPARSE_URL = "https://sparse.tamu.edu/MM/{group}/{name}.tar.gz"
+DOWNLOAD_TIMEOUT_S = 60
+
+
+def corpus_root(root: str | None = None) -> str:
+    """Where downloaded matrices live: ``<cache root>/corpus`` under the
+    same root the plan cache resolves (HYLU_CACHE_ROOT / repo
+    checkpoints), so one CI cache path covers both artifact stores."""
+    if root is None:
+        from repro.core.plan_cache import default_cache_root
+        root = default_cache_root()
+    return os.path.join(root, "corpus")
+
+
+@dataclasses.dataclass(frozen=True)
+class CorpusEntry:
+    """One corpus matrix: a real SuiteSparse (group, name) target plus the
+    deterministic synthetic stand-in used when the download is
+    unreachable.  ``klass`` is the sparsity class the scale lane slices
+    by; ``analyze_only`` marks entries past the compile budget (the bench
+    records analyze+plan statistics but skips the XLA build)."""
+    name: str
+    klass: str                       # circuit | powergrid | fem
+    gen: object                      # () -> scipy CSR, deterministic
+    suitesparse: tuple | None = None # (group, name) on sparse.tamu.edu
+    analyze_only: bool = False
+
+
+def _entries() -> list:
+    return [
+        # circuit class (paper's headline regime: rowrow routing, long
+        # narrow level tails — the amalgamation stress case)
+        CorpusEntry("memplus", "circuit",
+                    lambda: circuit_like(17758, seed=910),
+                    suitesparse=("Hamm", "memplus")),
+        CorpusEntry("circuit_3", "circuit",
+                    lambda: circuit_like(12127, seed=911),
+                    suitesparse=("Bomhof", "circuit_3")),
+        CorpusEntry("circuit_10k", "circuit",
+                    lambda: circuit_like(10000, seed=912)),
+        CorpusEntry("circuit_100k", "circuit",
+                    lambda: circuit_like(100000, seed=913),
+                    analyze_only=True),
+        # power-grid class
+        CorpusEntry("bcspwr10", "powergrid",
+                    lambda: powergrid_like(72, 74, seed=920),
+                    suitesparse=("HB", "bcspwr10")),
+        CorpusEntry("powergrid_11k", "powergrid",
+                    lambda: powergrid_like(100, 110, seed=921)),
+        # FEM class (hybrid/supernodal routing; wide panels)
+        CorpusEntry("fem2d_10k", "fem",
+                    lambda: fem2d(100, 100, seed=930)),
+        CorpusEntry("fem3d_11k", "fem",
+                    lambda: fem3d(22, 22, 22, seed=931)),
+    ]
+
+
+def corpus() -> list:
+    """The full ``--large`` corpus (the nightly lane)."""
+    return _entries()
+
+
+def smoke_corpus() -> list:
+    """The CI scale-smoke subset: one circuit-class and one FEM-class
+    matrix at n >= 10^4, both synthetic-deterministic so the smoke lane
+    never depends on network reachability."""
+    by_name = {e.name: e for e in _entries()}
+    return [by_name["circuit_10k"], by_name["fem2d_10k"]]
+
+
+def matrix_stats(a: sp.spmatrix) -> dict:
+    """The sparsity statistics synthetic stand-ins are matched on."""
+    a = a.tocsr()
+    n = a.shape[0]
+    nnz = a.nnz
+    pattern = a.copy()
+    pattern.data = np.ones_like(pattern.data)
+    both = pattern.multiply(pattern.T)
+    deg = np.diff(a.indptr)
+    return dict(
+        n=int(n),
+        nnz=int(nnz),
+        density=float(nnz) / float(n) ** 2,
+        avg_degree=float(nnz) / float(n),
+        max_degree=int(deg.max()) if n else 0,
+        symmetry_frac=float(both.nnz) / max(nnz, 1),
+    )
+
+
+def _extract_mtx(tar_bytes: bytes, name: str) -> sp.spmatrix | None:
+    """The main ``<name>/<name>.mtx`` member of a SuiteSparse tarball
+    (ignoring the ``_b``/``_x`` auxiliary vectors some entries carry)."""
+    import scipy.io
+
+    with tarfile.open(fileobj=io.BytesIO(tar_bytes), mode="r:gz") as tf:
+        for member in tf.getmembers():
+            base = os.path.basename(member.name)
+            if base == f"{name}.mtx":
+                f = tf.extractfile(member)
+                if f is not None:
+                    return sp.csr_matrix(scipy.io.mmread(f))
+    return None
+
+
+def fetch_suitesparse(group: str, name: str, root: str | None = None,
+                      allow_download: bool = True) -> sp.spmatrix | None:
+    """``<root>/corpus/<group>_<name>.npz`` if cached, else download from
+    sparse.tamu.edu (when allowed) and cache.  Returns None — never
+    raises — when the matrix is unreachable: callers fall back to the
+    synthetic stand-in, so offline runs degrade instead of failing."""
+    cdir = corpus_root(root)
+    path = os.path.join(cdir, f"{group}_{name}.npz")
+    if os.path.exists(path):
+        try:
+            return sp.load_npz(path)
+        except (OSError, ValueError):
+            pass                      # corrupt cache entry: re-download
+    if not allow_download or os.environ.get("HYLU_CORPUS_OFFLINE"):
+        return None
+    url = SUITESPARSE_URL.format(group=group, name=name)
+    try:
+        with urllib.request.urlopen(url, timeout=DOWNLOAD_TIMEOUT_S) as r:
+            a = _extract_mtx(r.read(), name)
+    except Exception:                 # URLError/timeout/bad archive: offline
+        return None
+    if a is None:
+        return None
+    os.makedirs(cdir, exist_ok=True)
+    tmp = f"{path}.tmp-{os.getpid()}"
+    try:
+        sp.save_npz(tmp, sp.csr_matrix(a))
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+    return a
+
+
+def load_entry(entry: CorpusEntry, root: str | None = None,
+               allow_download: bool = True) -> tuple:
+    """(CSR, scipy CSR, meta) for one corpus entry — the real SuiteSparse
+    matrix when reachable, its synthetic stand-in otherwise.  ``meta``
+    records which one ran (``source``) plus :func:`matrix_stats`, so
+    bench records are auditable."""
+    a = None
+    source = "synthetic"
+    if entry.suitesparse is not None:
+        a = fetch_suitesparse(*entry.suitesparse, root=root,
+                              allow_download=allow_download)
+        if a is not None:
+            source = "suitesparse"
+    if a is None:
+        a = entry.gen()
+    a = sp.csr_matrix(a)
+    if a.shape[0] != a.shape[1]:
+        raise ValueError(f"corpus entry {entry.name}: matrix is "
+                         f"{a.shape[0]}x{a.shape[1]}, expected square")
+    a.sort_indices()
+    meta = dict(name=entry.name, klass=entry.klass, source=source,
+                analyze_only=entry.analyze_only, **matrix_stats(a))
+    return CSR.from_scipy(a), a, meta
+
+
+def main() -> None:
+    for e in corpus():
+        _, _, meta = load_entry(e, allow_download=False)
+        print({k: (round(v, 6) if isinstance(v, float) else v)
+               for k, v in meta.items()})
+
+
+if __name__ == "__main__":
+    main()

@@ -131,6 +131,14 @@ def analyze(a: CSR, opts: HyluOptions | None = None, reuse=None) -> Analysis:
                                 relax=opts.relax, max_super=opts.max_super)
     t["symbolic"] = time.perf_counter() - t0
 
+    if opts.amalg_fill_tol > 0:
+        from .structure import amalgamate_supernodes
+        t0 = time.perf_counter()
+        sym, amalg_stats = amalgamate_supernodes(
+            sym, fill_tol=opts.amalg_fill_tol, max_super=opts.max_super)
+        choice.stats["amalg"] = amalg_stats
+        t["amalgamate"] = time.perf_counter() - t0
+
     t0 = time.perf_counter()
     m = CSR(a.n, m_track.indptr, m_track.indices, np.ones(a.nnz))
     plan = build_plan(pat_m, m, sym, mode=choice.mode,

@@ -676,6 +676,8 @@ class RepeatedSolveEngine:
                 "the engine, or request dtype=jnp.float32 explicitly")
         self.n = plan.n
         self.dtype = dtype
+        self.plan = plan
+        self.bulk_min_width = bulk_min_width
         factor_fn = make_factor_fn(plan, perturb_eps=perturb_eps, dtype=dtype,
                                    use_pallas=use_pallas, interpret=interpret,
                                    schedule=schedule,
@@ -750,6 +752,14 @@ class RepeatedSolveEngine:
         self.apply_batched = jax.jit(_apply_batched)
         self.lut_solve = jax.jit(lut_solve)
         self._refined_cache: dict = {}
+
+    def memory_stats(self, k: int = 1) -> dict:
+        """Plan-derived byte accounting of this engine at system-batch
+        size ``k``, with the engine's actual dtype width (see
+        :func:`repro.core.plan.memory_stats`)."""
+        from .plan import memory_stats
+        return memory_stats(self.plan, bulk_min_width=self.bulk_min_width,
+                            k=k, dtype_bytes=np.dtype(self.dtype).itemsize)
 
     def refined_batched_solver(self, indptr, indices, donate: bool = False):
         """The fused batched solve for K systems sharing the given original-A

@@ -38,6 +38,12 @@ class HyluOptions:
     orderings: tuple = ("min_degree", "nested_dissection", "natural")
     relax: int = 8
     max_super: int = 128
+    amalg_fill_tol: float = 0.0            # post-symbolic supernode
+                                           # amalgamation: merge adjacent
+                                           # nodes while the extra explicit
+                                           # zeros stay under this fraction
+                                           # of their separate storage
+                                           # (0 = off, plan unchanged)
     perturb_eps: float = 1e-8
     refine_max_iter: int = 3
     refine_tol: float = 1e-12
@@ -54,13 +60,18 @@ class HyluOptions:
     donate: bool = False                   # sequence pipeline donates value/
                                            # RHS/factor buffers step-to-step
                                            # (consumed states; no realloc)
+    cache_root: str | None = None          # artifact-store root for plan
+                                           # cache/corpus downloads; None →
+                                           # $HYLU_CACHE_ROOT or
+                                           # <repo>/checkpoints (runtime-only,
+                                           # never part of the fingerprint)
 
 
 # Options that change the analysis artifact (ordering/symbolic/plan) or the
 # compiled engine built from it — the option half of a plan fingerprint.
 PLAN_OPTION_FIELDS = ("force_mode", "orderings", "relax", "max_super",
-                      "perturb_eps", "bulk_min_width", "factor_schedule",
-                      "use_pallas")
+                      "amalg_fill_tol", "perturb_eps", "bulk_min_width",
+                      "factor_schedule", "use_pallas")
 
 
 def plan_options_key(opts: HyluOptions | None) -> tuple:

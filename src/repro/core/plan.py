@@ -208,6 +208,50 @@ def build_plan(pat_sym: CSR, numeric: CSR, sym: Symbolic, mode: str = "hybrid",
                       row_perm_slots=row_perm_slots)
 
 
+def memory_stats(plan: FactorPlan, bulk_min_width: int = 8, k: int = 1,
+                 dtype_bytes: int = 8) -> dict:
+    """Deterministic plan-derived byte accounting of the numeric phase —
+    what the repeated-solve engine resident set looks like BEFORE running
+    it, so scale benchmarks can report (and CI can regression-check) a
+    footprint that does not depend on allocator noise.
+
+    ``panel_bytes``     one set of factor values (``total_slots`` slots);
+    ``workspace_bytes`` the factor working buffer incl. the zero/one/scratch
+                        sentinel slots (``n_ext``);
+    ``schedule_index_bytes``  every static gather/scatter index array of the
+                        bucketed schedule (the compile-time trace payload);
+    ``batched_bytes``   value + RHS + solution buffers for a system batch of
+                        ``k`` (the batched refactor path's per-K cost);
+    ``total_bytes``     the sum — the engine's steady-state floor."""
+    from .structure import get_bucket_schedule
+
+    sched = get_bucket_schedule(plan, bulk_min_width=bulk_min_width)
+    idx = 0
+    for s in sched.steps:
+        if s.diag is not None:
+            idx += s.diag.nids.nbytes + s.diag.slots.nbytes
+        idx += s.seq.nbytes
+        for pb in s.panels:
+            idx += (pb.nids.nbytes + pb.gather.nbytes + pb.scatter.nbytes
+                    + pb.rows.nbytes)
+        for eb in s.edges:
+            idx += (eb.srcs.nbytes + eb.tgts.nbytes + eb.src_idx.nbytes
+                    + eb.x_idx.nbytes + eb.write_idx.nbytes)
+    for c in sched.scan_chunks:
+        idx += (c.dsl.nbytes + c.x_idx.nbytes + c.src_idx.nbytes
+                + c.write_idx.nbytes)
+    panel = plan.total_slots * dtype_bytes
+    workspace = sched.n_ext * dtype_bytes
+    batched = k * (sched.n_ext + 2 * plan.n) * dtype_bytes
+    return dict(
+        panel_bytes=int(panel),
+        workspace_bytes=int(workspace),
+        schedule_index_bytes=int(idx),
+        batched_bytes=int(batched),
+        total_bytes=int(panel + workspace + idx + batched),
+    )
+
+
 def plan_stats(plan: FactorPlan, include_buckets: bool = True,
                bulk_min_width: int = 8) -> dict:
     """Plan statistics; with ``include_buckets`` (default) also the
@@ -221,11 +265,14 @@ def plan_stats(plan: FactorPlan, include_buckets: bool = True,
     nrs = np.array([nd.nr for nd in plan.nodes])
     n_edges = sum(len(nd.edges) for nd in plan.nodes)
     bucket = {}
+    mem = {}
     if include_buckets:
         from .structure import bucket_stats
         bucket = bucket_stats(plan, bulk_min_width=bulk_min_width)
+        mem = memory_stats(plan, bulk_min_width=bulk_min_width)
     return dict(
         **bucket,
+        **mem,
         mode=plan.mode,
         n_nodes=plan.n_nodes,
         n_edges=n_edges,

@@ -13,7 +13,10 @@ the analysis a cached, persisted, shared artifact:
 * disk persistence — ``save_analysis`` / ``load_analysis`` serialize the
   full analysis artifact (matching, ordering, symbolic structure, the
   static FactorPlan with its node/edge maps) to a single versioned ``.npz``
-  under ``checkpoints/plan_cache/<fingerprint>.npz``.  A fresh process
+  under ``<cache root>/plan_cache/<fingerprint>.npz``, where the cache
+  root is ``HyluOptions.cache_root`` / ``$HYLU_CACHE_ROOT`` / the repo's
+  ``checkpoints`` dir (see :func:`default_cache_root` — never the CWD,
+  so bench and CI runs don't scatter cache dirs).  A fresh process
   loads the artifact and skips the host analyze phase entirely; only the
   XLA compile remains, which the persistent jax compilation cache absorbs.
   The level-bucketed factor schedule and solve structure are *derived*
@@ -55,7 +58,37 @@ from .options import HyluOptions, plan_options_key, plan_fingerprint
 from .analysis import Analysis, analyze
 
 FORMAT_VERSION = 1
-DEFAULT_CACHE_DIR = os.path.join("checkpoints", "plan_cache")
+# Sentinel: resolved to <cache root>/plan_cache at PlanCache construction
+# (NOT at import), so $HYLU_CACHE_ROOT set after import still wins.
+DEFAULT_CACHE_DIR = "auto"
+
+
+def default_cache_root() -> str:
+    """The artifact-store root every component that persists state shares
+    (plan cache, corpus downloads): ``$HYLU_CACHE_ROOT`` when set, else
+    ``<repo>/checkpoints`` when this package runs from a source checkout
+    (the historical location — next to the repo, NOT the CWD), else
+    ``~/.cache/hylu`` for installed packages."""
+    env = os.environ.get("HYLU_CACHE_ROOT")
+    if env:
+        return env
+    # src/repro/core/plan_cache.py -> repo root is 4 levels up
+    repo = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))))
+    if os.path.exists(os.path.join(repo, "pyproject.toml")):
+        return os.path.join(repo, "checkpoints")
+    return os.path.join(os.path.expanduser("~"), ".cache", "hylu")
+
+
+def resolve_cache_dir(directory: str | None,
+                      cache_root: str | None = None) -> str | None:
+    """Map a PlanCache ``directory`` setting to a concrete path: the
+    ``DEFAULT_CACHE_DIR`` sentinel becomes ``<root>/plan_cache`` where
+    ``root`` is ``cache_root`` (``HyluOptions.cache_root``) or
+    :func:`default_cache_root`; explicit paths and None pass through."""
+    if directory != DEFAULT_CACHE_DIR:
+        return directory
+    return os.path.join(cache_root or default_cache_root(), "plan_cache")
 
 
 class PlanCacheFormatError(ValueError):
@@ -268,7 +301,12 @@ class PlanCache:
     capacity   — max in-memory entries; least-recently-used analyses (and
                  their compiled engines) are evicted beyond it
     directory  — persistence root (``<directory>/<fingerprint>.npz``);
-                 None disables disk entirely
+                 None disables disk entirely; the default ``"auto"``
+                 sentinel resolves to ``<cache root>/plan_cache`` at
+                 construction via :func:`resolve_cache_dir` — i.e.
+                 ``$HYLU_CACHE_ROOT`` or next to the repo, never the CWD
+    cache_root — overrides the auto-resolved root (``HyluOptions.
+                 cache_root``); ignored when ``directory`` is explicit
 
     ``stats`` counters: ``hits`` (in-memory), ``disk_hits`` (loaded from
     the artifact store — the analyze phase was skipped), ``misses`` (full
@@ -276,8 +314,10 @@ class PlanCache:
     plus accumulated ``analyze_s`` / ``load_s`` wall times."""
     capacity: int = 32
     directory: str | None = DEFAULT_CACHE_DIR
+    cache_root: str | None = None
 
     def __post_init__(self):
+        self.directory = resolve_cache_dir(self.directory, self.cache_root)
         self._entries: OrderedDict[str, Analysis] = OrderedDict()
         self.stats = dict(hits=0, misses=0, disk_hits=0, saves=0,
                           evictions=0, analyze_calls=0,

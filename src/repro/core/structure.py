@@ -12,6 +12,121 @@ import dataclasses
 import numpy as np
 
 from .plan import FactorPlan
+from .symbolic import Symbolic
+
+
+# --------------------------------------------------------------------------
+# supernode amalgamation (panel fattening under a fill tolerance)
+# --------------------------------------------------------------------------
+def _node_fill_pattern(sym: Symbolic, r0: int, r1: int) -> np.ndarray:
+    """Filled column pattern of the row run [r0, r1): union over its rows of
+    {i} ∪ struct(L row i) ∪ struct(U row i) — under the symmetrized pattern
+    struct(U row i) beyond the diagonal equals struct(L col i) transposed,
+    which the symbolic analysis already carries (``lcol``).  This is the
+    partition-independent lower bound of the plan's panel width (merged
+    upstream sources can only widen it)."""
+    parts = [np.arange(r0, r1, dtype=np.int64)]
+    for i in range(r0, r1):
+        parts.append(sym.lrow_idx[sym.lrow_ptr[i]:sym.lrow_ptr[i + 1]])
+        parts.append(sym.lcol_idx[sym.lcol_ptr[i]:sym.lcol_ptr[i + 1]])
+    return np.unique(np.concatenate(parts))
+
+
+def amalgamate_supernodes(sym: Symbolic, fill_tol: float,
+                          max_super: int = 128) -> tuple[Symbolic, dict]:
+    """Merge *independent* adjacent supernodes with near-identical column
+    patterns into fatter panels (CKTSO-style relaxation, one knob past the
+    fundamental / ``relax`` amalgamation of ``symbolic_factorize``).
+
+    A run of consecutive nodes is grown greedily while (a) the candidate
+    does not depend on the run — no filled L/U entry couples its rows to
+    the run's rows, checked on the filled structures — and (b) the extra
+    explicit zeros the merged panel stores — ``(nr_merged × w_merged) − Σ
+    separate slots`` — stay within ``fill_tol`` of the run's separate
+    storage, and the merged block height stays ≤ ``max_super``.
+
+    Why independence: near-identical adjacent columns in circuit matrices
+    are overwhelmingly *sibling* columns (parallel device terminals, tied
+    nets) — independent, at the same elimination depth — and merging them
+    fattens the level's panels without touching the level structure, so
+    the bucketed schedule's long scanned width-1 tail (its compile-time
+    lifeline at n≥10^4) survives.  Merging *dependent* chain nodes instead
+    collapses levels but converts the scanned tail into thousands of
+    unrolled level steps, which does not compile in reasonable time on
+    XLA:CPU; dependent parent/child fattening is the existing ``relax``
+    knob's job inside ``symbolic_factorize``.
+
+    Structural zeros inside a union pattern carry exact numeric zeros (see
+    :mod:`repro.core.plan`), so the coarsening is numerically exact: the
+    amalgamated plan factors to the same L/U values and solves
+    bit-identically; only panel geometry (node count, pad waste, kernel
+    shapes) changes.
+
+    Returns the coarsened ``Symbolic`` plus a stats dict
+    (``n_nodes_before/after``, ``n_merges``, ``est_extra_slots``,
+    ``est_base_slots``, ``fill_tol``).  ``fill_tol <= 0`` returns the input
+    partition unchanged (and the stats record zero merges), so the default
+    plan is bit-for-bit the historical one."""
+    starts, ends = sym.snode_start, sym.snode_end
+    n_nodes = len(starts)
+    base_slots = 0
+    stats = dict(n_nodes_before=int(n_nodes), n_nodes_after=int(n_nodes),
+                 n_merges=0, est_extra_slots=0, est_base_slots=0,
+                 fill_tol=float(fill_tol))
+    if fill_tol <= 0 or n_nodes <= 1:
+        return sym, stats
+
+    new_starts = []
+    est_extra = 0
+    n_merges = 0
+    cur_r0, cur_r1 = int(starts[0]), int(ends[0])
+    cur_pat = _node_fill_pattern(sym, cur_r0, cur_r1)
+    cur_sep = (cur_r1 - cur_r0) * len(cur_pat)   # separate-storage sum of run
+    base_slots = cur_sep
+
+    def _close_run():
+        nonlocal est_extra
+        new_starts.append(cur_r0)
+        est_extra += (cur_r1 - cur_r0) * len(cur_pat) - cur_sep
+
+    for t in range(1, n_nodes):
+        r0, r1 = int(starts[t]), int(ends[t])
+        pat_t = _node_fill_pattern(sym, r0, r1)
+        sep_t = (r1 - r0) * len(pat_t)
+        base_slots += sep_t
+        nr_m = r1 - cur_r0
+        if nr_m <= max_super:
+            # independence: the candidate's pattern must not reach back
+            # into the run's rows (entries < r0 in pat_t are exactly its
+            # filled L-row structure = its in-factor dependencies), and
+            # the run's pattern must not reach into the candidate's rows
+            lo = np.searchsorted(pat_t, cur_r0)
+            hi = np.searchsorted(pat_t, r0)
+            lo2 = np.searchsorted(cur_pat, r0)
+            hi2 = np.searchsorted(cur_pat, r1)
+            if lo == hi and lo2 == hi2:
+                pat_m = np.union1d(cur_pat, pat_t)
+                extra = nr_m * len(pat_m) - (cur_sep + sep_t)
+                if extra <= fill_tol * (cur_sep + sep_t):
+                    cur_pat, cur_r1 = pat_m, r1
+                    cur_sep += sep_t
+                    n_merges += 1
+                    continue
+        _close_run()
+        cur_r0, cur_r1, cur_pat, cur_sep = r0, r1, pat_t, sep_t
+    _close_run()
+
+    new_starts = np.asarray(new_starts, dtype=np.int64)
+    new_ends = np.append(new_starts[1:], sym.n)
+    snode_of = np.zeros(sym.n, dtype=np.int64)
+    for t in range(len(new_starts)):
+        snode_of[new_starts[t]:new_ends[t]] = t
+    stats.update(n_nodes_after=len(new_starts), n_merges=int(n_merges),
+                 est_extra_slots=int(est_extra),
+                 est_base_slots=int(base_slots))
+    out = dataclasses.replace(sym, snode_of=snode_of,
+                              snode_start=new_starts, snode_end=new_ends)
+    return out, stats
 
 
 @dataclasses.dataclass

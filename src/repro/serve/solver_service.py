@@ -76,7 +76,10 @@ class SolverService:
     cache          — a PlanCache to share across services; built from
                      cache_dir/cache_capacity when None
     cache_dir      — artifact-store directory for the internally-built
-                     cache (None disables disk persistence)
+                     cache (None disables disk persistence; the default
+                     sentinel resolves under ``opts.cache_root`` /
+                     ``$HYLU_CACHE_ROOT`` / the repo's ``checkpoints``
+                     dir — see ``repro.core.plan_cache.resolve_cache_dir``)
     cache_capacity — LRU bound of the internally-built cache
     batch_size     — fixed dispatch batch: every group is chunked and
                      padded up to this many systems, so each pattern
@@ -95,7 +98,8 @@ class SolverService:
                  batch_size: int | None = 8):
         self.opts = opts or HyluOptions()
         self.cache = cache if cache is not None else PlanCache(
-            capacity=cache_capacity, directory=cache_dir)
+            capacity=cache_capacity, directory=cache_dir,
+            cache_root=self.opts.cache_root)
         if batch_size is not None and batch_size < 1:
             raise ValueError(f"batch_size must be >= 1, got {batch_size}")
         self.batch_size = batch_size

@@ -1,0 +1,135 @@
+"""Supernode amalgamation invariants (``HyluOptions.amalg_fill_tol``).
+
+The contract: amalgamation is a *scheduling* transform — merged panels
+carry exact numeric zeros in their structural-zero slots, so the
+amalgamated plan factors to the same L/U values and every engine solves
+to the same answer (1e-10 here; the difference is pure float summation
+order).  fill_tol=0 must reproduce the historical plan bit-for-bit.
+"""
+import numpy as np
+import pytest
+
+from repro.core.api import HyluOptions, analyze, factor, solve
+from repro.core.structure import amalgamate_supernodes
+
+from tests.helpers import SCENARIOS, scenario_system
+
+
+def _plans_equal(p0, p1):
+    if p0.n_nodes != p1.n_nodes or p0.total_slots != p1.total_slots:
+        return False
+    for a, b in zip(p0.nodes, p1.nodes):
+        if (a.r0, a.r1, a.lsize, a.usize, a.level) != \
+                (b.r0, b.r1, b.lsize, b.usize, b.level):
+            return False
+        if not np.array_equal(a.pattern, b.pattern):
+            return False
+        if len(a.edges) != len(b.edges):
+            return False
+        for ea, eb in zip(a.edges, b.edges):
+            if ea.src != eb.src or not np.array_equal(ea.col_map,
+                                                      eb.col_map):
+                return False
+    return True
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+@pytest.mark.parametrize("engine", ["ref", "jax"])
+def test_amalgamated_solve_matches_plain(name, engine):
+    """Across the scenario matrix and both engines: the amalgamated plan's
+    solution agrees with the unamalgamated one to 1e-10."""
+    Ac, _, b, _ = scenario_system(name, n=120, seed=7)
+    x_plain, info_plain = solve(
+        factor(analyze(Ac, HyluOptions()), Ac, engine=engine), b)
+    an = analyze(Ac, HyluOptions(amalg_fill_tol=1.0))
+    x_amalg, info_amalg = solve(factor(an, Ac, engine=engine), b)
+    assert np.max(np.abs(x_plain - x_amalg)) < 1e-10
+    assert info_amalg["residual"] < 1e-8
+    assert "amalg" in an.choice.stats
+
+
+def test_fill_tol_zero_reproduces_plan_exactly():
+    """fill_tol=0 is bit-for-bit the historical plan (same partition, same
+    node patterns/edges/levels), and the amalgamation hook doesn't run."""
+    Ac, _, _, _ = scenario_system("circuit", n=100, seed=3)
+    an0 = analyze(Ac, HyluOptions())
+    an1 = analyze(Ac, HyluOptions(amalg_fill_tol=0.0))
+    assert _plans_equal(an0.plan, an1.plan)
+    assert np.array_equal(an0.sym.snode_start, an1.sym.snode_start)
+    assert np.array_equal(an0.sym.snode_of, an1.sym.snode_of)
+    assert "amalg" not in an1.choice.stats
+    assert "amalgamate" not in an1.timings
+
+
+def test_amalgamation_merges_near_identical_columns():
+    """A dense-ish matrix has runs of independent near-identical columns:
+    amalgamation must actually coarsen the partition and record it."""
+    Ac, _, _, _ = scenario_system("denseish", n=100, seed=5)
+    an0 = analyze(Ac, HyluOptions())
+    an1 = analyze(Ac, HyluOptions(amalg_fill_tol=1.0))
+    st = an1.choice.stats["amalg"]
+    assert st["n_merges"] > 0
+    assert st["n_nodes_after"] == st["n_nodes_before"] - st["n_merges"]
+    assert len(an1.plan.nodes) < len(an0.plan.nodes)
+    assert len(an1.plan.nodes) == st["n_nodes_after"]
+
+
+def test_amalgamate_supernodes_partition_invariants():
+    """The coarsened Symbolic stays a consecutive-row partition: starts
+    strictly ascend from 0, ends chain to n, snode_of is consistent, and
+    every merge respects max_super."""
+    Ac, _, _, _ = scenario_system("denseish", n=90, seed=11)
+    an = analyze(Ac, HyluOptions())
+    sym2, st = amalgamate_supernodes(an.sym, fill_tol=2.0, max_super=8)
+    starts, ends = sym2.snode_start, sym2.snode_end
+    assert starts[0] == 0 and ends[-1] == sym2.n
+    assert np.all(starts[1:] == ends[:-1])
+    # max_super bounds *merges*; a node symbolic_factorize already made
+    # wider passes through untouched.  So every new node is either an
+    # original node verbatim or a merge within the cap.
+    orig = set(zip(an.sym.snode_start.tolist(), an.sym.snode_end.tolist()))
+    for r0, r1 in zip(starts.tolist(), ends.tolist()):
+        assert (r0, r1) in orig or r1 - r0 <= 8
+    for t in range(len(starts)):
+        assert np.all(sym2.snode_of[starts[t]:ends[t]] == t)
+    assert st["n_nodes_after"] == len(starts)
+    # the untouched symbolic fields are shared, not copied
+    assert sym2.lrow_ptr is an.sym.lrow_ptr
+    assert sym2.lcol_ptr is an.sym.lcol_ptr
+
+
+def test_amalgamation_independence_preserved():
+    """Merged nodes must be mutually independent (no filled L/U entry
+    between constituents): inside every merged node, no row's filled L-row
+    structure reaches another constituent row of the same node.  This is
+    the guarantee that keeps level structure — and the scanned width-1
+    tail of the bucketed schedule — intact."""
+    Ac, _, _, _ = scenario_system("denseish", n=100, seed=5)
+    an0 = analyze(Ac, HyluOptions())
+    width0 = dict()
+    for t in range(len(an0.sym.snode_start)):
+        width0[int(an0.sym.snode_start[t])] = (
+            int(an0.sym.snode_end[t]) - int(an0.sym.snode_start[t]))
+    an1 = analyze(Ac, HyluOptions(amalg_fill_tol=1.0))
+    sym = an1.sym
+    for t in range(len(sym.snode_start)):
+        r0, r1 = int(sym.snode_start[t]), int(sym.snode_end[t])
+        # walk the original nodes inside [r0, r1): dependencies may exist
+        # inside one original node (its own panel), never across them
+        cut = r0 + width0.get(r0, r1 - r0)
+        cuts = [r0]
+        while cut < r1:
+            cuts.append(cut)
+            cut += width0.get(cut, r1 - cut)
+        for i in range(r0, r1):
+            lr = sym.lrow_idx[sym.lrow_ptr[i]:sym.lrow_ptr[i + 1]]
+            own_start = max(c for c in cuts if c <= i)
+            cross = lr[(lr >= r0) & (lr < own_start)]
+            assert cross.size == 0, (t, i, cross)
+
+
+def test_analyze_records_amalg_timing():
+    Ac, _, _, _ = scenario_system("denseish", n=80, seed=2)
+    an = analyze(Ac, HyluOptions(amalg_fill_tol=0.5))
+    assert "amalgamate" in an.timings
+    assert an.timings["total"] >= an.timings["amalgamate"]

@@ -14,8 +14,9 @@ from repro.core import CSR, HyluOptions, analyze
 from repro.core.api import (factor, factor_batched, solve, solve_batched,
                             pattern_key, plan_fingerprint)
 from repro.core.plan_cache import (PlanCache, PlanCacheFormatError,
-                                   FORMAT_VERSION, save_analysis,
-                                   load_analysis)
+                                   FORMAT_VERSION, DEFAULT_CACHE_DIR,
+                                   default_cache_root, resolve_cache_dir,
+                                   save_analysis, load_analysis)
 
 from tests.helpers import scenario_system
 
@@ -59,12 +60,14 @@ def test_fingerprint_distinct_per_plan_affecting_option():
                 HyluOptions(perturb_eps=1e-6),
                 HyluOptions(bulk_min_width=4),
                 HyluOptions(factor_schedule="unrolled"),
-                HyluOptions(use_pallas=True)]
+                HyluOptions(use_pallas=True),
+                HyluOptions(amalg_fill_tol=0.3)]
     fps = [plan_fingerprint(Ac, o) for o in distinct]
     assert len({base, *fps}) == len(distinct) + 1
     same = [HyluOptions(engine="jax"), HyluOptions(mesh=1),
             HyluOptions(donate=True), HyluOptions(refine_max_iter=9),
-            HyluOptions(refine_tol=1e-9)]
+            HyluOptions(refine_tol=1e-9),
+            HyluOptions(cache_root="/tmp/elsewhere")]
     for o in same:
         assert plan_fingerprint(Ac, o) == base, o
 
@@ -314,3 +317,39 @@ def test_persistence_round_trip_subprocess(tmp_path):
     xhash = [ln for ln in r.stdout.splitlines()
              if ln.startswith("XHASH")][0].split()[1]
     assert xhash == x0.tobytes().hex()[:64]    # byte-for-byte identical
+
+
+# ---------------------------------------------------------------------------
+# cache-root resolution (the CWD-relative-path fix)
+
+def test_cache_dir_resolution(tmp_path, monkeypatch):
+    """The 'auto' directory sentinel never resolves relative to the CWD:
+    explicit paths and None pass through untouched; HyluOptions.cache_root
+    wins over $HYLU_CACHE_ROOT, which wins over the package-derived
+    default — and the default is absolute regardless of os.getcwd()."""
+    assert resolve_cache_dir(None) is None
+    assert resolve_cache_dir("some/dir") == "some/dir"
+    # options-level root beats the environment
+    monkeypatch.setenv("HYLU_CACHE_ROOT", str(tmp_path / "env"))
+    got = resolve_cache_dir(DEFAULT_CACHE_DIR, cache_root=str(tmp_path / "o"))
+    assert got == str(tmp_path / "o" / "plan_cache")
+    assert resolve_cache_dir(DEFAULT_CACHE_DIR) == \
+        str(tmp_path / "env" / "plan_cache")
+    # with no overrides the root is absolute and CWD-independent
+    monkeypatch.delenv("HYLU_CACHE_ROOT")
+    monkeypatch.chdir(tmp_path)
+    root = default_cache_root()
+    assert os.path.isabs(root)
+    assert str(tmp_path) not in root
+
+
+def test_plan_cache_honors_cache_root(tmp_path):
+    """A PlanCache built with the sentinel + an explicit cache_root writes
+    its artifacts under <root>/plan_cache, not under the CWD."""
+    cache = PlanCache(directory=DEFAULT_CACHE_DIR,
+                      cache_root=str(tmp_path / "store"))
+    assert cache.directory == str(tmp_path / "store" / "plan_cache")
+    Ac, _, _, _ = scenario_system("circuit", n=32, seed=1)
+    cache.get_or_analyze(Ac, HyluOptions())
+    assert os.path.isdir(cache.directory)
+    assert os.listdir(cache.directory)         # artifact persisted there

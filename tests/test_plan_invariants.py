@@ -16,19 +16,22 @@ from repro.core.api import HyluOptions, analyze
 from repro.core.matrix import CSR
 
 
-def _analysis(seed, n, density, mode):
+def _analysis(seed, n, density, mode, amalg_fill_tol=0.0):
     rng = np.random.default_rng(seed)
     a = sp.random(n, n, density=density,
                   random_state=np.random.RandomState(seed), format="csr")
     a = a + sp.diags(rng.uniform(1, 2, n) * rng.choice([-1, 1], n))
-    return analyze(CSR.from_scipy(a.tocsr()), HyluOptions(force_mode=mode))
+    return analyze(CSR.from_scipy(a.tocsr()),
+                   HyluOptions(force_mode=mode,
+                               amalg_fill_tol=amalg_fill_tol))
 
 
 @settings(max_examples=12, deadline=None)
 @given(st.integers(0, 10_000), st.integers(10, 80), st.floats(0.03, 0.2),
-       st.sampled_from(["rowrow", "hybrid", "supernodal"]))
-def test_plan_invariants(seed, n, density, mode):
-    an = _analysis(seed, n, density, mode)
+       st.sampled_from(["rowrow", "hybrid", "supernodal"]),
+       st.sampled_from([0.0, 0.5, 2.0]))
+def test_plan_invariants(seed, n, density, mode, amalg_fill_tol):
+    an = _analysis(seed, n, density, mode, amalg_fill_tol)
     plan = an.plan
 
     # --- panel layout partitions storage ---------------------------------
@@ -74,16 +77,19 @@ def test_plan_invariants(seed, n, density, mode):
 
     # --- flops accounting --------------------------------------------------
     assert plan.useful_flops <= plan.padded_flops + 1e-6
-    if mode == "rowrow":
-        # width-1 nodes: no padding waste by construction
+    if mode == "rowrow" and amalg_fill_tol == 0.0:
+        # width-1 nodes: no padding waste by construction (amalgamation
+        # re-fattens panels, so the equality only holds with it off)
         assert abs(plan.useful_flops - plan.padded_flops) < 1e-6
 
 
 @settings(max_examples=10, deadline=None)
 @given(st.integers(0, 10_000), st.integers(12, 70), st.floats(0.04, 0.22),
        st.sampled_from(["rowrow", "hybrid", "supernodal"]),
-       st.sampled_from([2, 8]))
-def test_bucket_schedule_invariants(seed, n, density, mode, bmw):
+       st.sampled_from([2, 8]),
+       st.sampled_from([0.0, 1.0]))
+def test_bucket_schedule_invariants(seed, n, density, mode, bmw,
+                                    amalg_fill_tol):
     """The level-bucketed factor schedule must be a complete, non-
     overlapping re-grouping of the plan: every node's internal LU appears
     exactly once (diag bucket, panel bucket, sequential list, or scanned
@@ -92,7 +98,7 @@ def test_bucket_schedule_invariants(seed, n, density, mode, bmw):
     scatter positions within a level are disjoint."""
     from repro.core.structure import build_bucket_schedule
 
-    an = _analysis(seed, n, density, mode)
+    an = _analysis(seed, n, density, mode, amalg_fill_tol)
     plan = an.plan
     sched = build_bucket_schedule(plan, bulk_min_width=bmw)
     total = sched.total_slots

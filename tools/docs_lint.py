@@ -10,7 +10,10 @@ Checks, repo-relative:
   4. the serving stack's public options stay documented in docs/API.md:
      every ``PlanCache``/``SolverService`` constructor parameter, every
      ``SolveRequest``/``SolveResult`` field, and every plan-fingerprint
-     option field (``PLAN_OPTION_FIELDS``).
+     option field (``PLAN_OPTION_FIELDS``);
+  5. the corpus scale lane stays documented: every corpus matrix and
+     ``large``-section record field in docs/BENCHMARKS.md, the memory
+     accounting + amalgamation + cache-root surface in docs/API.md.
 
     PYTHONPATH=src python tools/docs_lint.py
 """
@@ -114,6 +117,52 @@ def check_serving_documented() -> list:
     return errors
 
 
+def check_scale_lane_documented() -> list:
+    """The corpus scale lane's public surface: every corpus entry and
+    every bench_corpus_entry record field must appear in
+    docs/BENCHMARKS.md, and the memory/amalgamation API must appear in
+    docs/API.md (the `large` JSON section must not rot as the scale lane
+    grows)."""
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    sys.path.insert(0, REPO)
+    from benchmarks import corpus
+
+    with open(os.path.join(REPO, "docs/BENCHMARKS.md"),
+              encoding="utf-8") as f:
+        bench_text = f.read()
+    with open(os.path.join(REPO, "docs/API.md"), encoding="utf-8") as f:
+        api_text = f.read()
+    errors = []
+    for name in [e.name for e in corpus.corpus()]:
+        if name not in bench_text:
+            errors.append(f"docs/BENCHMARKS.md: corpus matrix `{name}` "
+                          "undocumented")
+    record_fields = ("load_s", "analyze_s", "schedule_s", "compile_s",
+                     "refac_batched_s", "solve_fused_s", "amalg",
+                     "memory_bytes", "engine_memory_bytes", "peak_rss_mb",
+                     "worst_residual", "pad_waste_frac",
+                     "n_scanned_levels", "bulk_node_coverage")
+    errors.extend(
+        f"docs/BENCHMARKS.md: `large` record field `{n}` undocumented"
+        for n in record_fields if f"`{n}`" not in bench_text)
+    for flag in ("--large-smoke", "--large-only", "--large-k",
+                 "--amalg-tol", "HYLU_CORPUS_OFFLINE"):
+        if flag not in bench_text:
+            errors.append(f"docs/BENCHMARKS.md: bench flag `{flag}` "
+                          "undocumented")
+    for name in ("memory_stats", "amalgamate_supernodes",
+                 "HYLU_CACHE_ROOT", "resolve_cache_dir"):
+        if name not in api_text:
+            errors.append(f"docs/API.md: `{name}` undocumented")
+    memory_fields = ("panel_bytes", "workspace_bytes",
+                     "schedule_index_bytes", "batched_bytes",
+                     "total_bytes")
+    errors.extend(
+        f"docs/API.md: memory_stats field `{n}` undocumented"
+        for n in memory_fields if f"`{n}`" not in api_text)
+    return errors
+
+
 def check_readme_links_docs() -> list:
     with open(os.path.join(REPO, "README.md"), encoding="utf-8") as f:
         text = f.read()
@@ -123,13 +172,14 @@ def check_readme_links_docs() -> list:
 
 def main() -> int:
     errors = check_links() + check_options_documented() \
-        + check_serving_documented() + check_readme_links_docs()
+        + check_serving_documented() + check_scale_lane_documented() \
+        + check_readme_links_docs()
     for e in errors:
         print(f"docs-lint: {e}", file=sys.stderr)
     if not errors:
         n = len(DOC_FILES)
         print(f"docs-lint: OK ({n} files, all links + HyluOptions fields "
-              "+ plan-cache/serving surface)")
+              "+ plan-cache/serving surface + corpus scale lane)")
     return 1 if errors else 0
 
 

@@ -464,6 +464,99 @@ def bench_corpus(k=4, smoke=False, amalg_fill_tol=0.2, cache_root=None):
     )
 
 
+def bench_mixed_precision_matrix(name, Ac, k, reps=10):
+    """fp32-factor + fp64-refine vs pure fp64 on one matrix: steady-state
+    batched refactor and fused-solve times per dtype, the plan-derived
+    factor-panel bytes (the memory the reduced precision halves), how many
+    refinement iterations the fp64 recovery costs, the fp64-fallback rate,
+    and solution parity against the fp64 path."""
+    from repro.core import HyluOptions
+
+    rng = np.random.default_rng(0)
+    vb = _value_drift(Ac.data, k, rng)
+    bb = rng.normal(size=(k, Ac.n))
+
+    def _best(fn):
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn()
+            ts.append(time.perf_counter() - t0)
+        return min(ts)
+
+    rec = dict(n=Ac.n, nnz=Ac.nnz, k=k, dtypes={})
+    xs = {}
+    for dt in ("float64", "float32"):
+        an = analyze(Ac, HyluOptions(factor_dtype=dt))
+        t0 = time.perf_counter()
+        bst = factor_batched(an, Ac, vb)          # batched refactor compile
+        x, info = solve_batched(bst, bb)          # fused solve compile
+        compile_s = time.perf_counter() - t0
+        refac_s = _best(lambda: factor_batched(an, Ac, vb))
+        bst = factor_batched(an, Ac, vb)
+        solve_s = _best(lambda: solve_batched(bst, bb))
+        x, info = solve_batched(bst, bb)
+        xs[dt] = x
+        eng = jax_repeated_engine(an)
+        rec["dtypes"][dt] = dict(
+            mode=an.choice.mode, compile_s=compile_s,
+            refac_batched_s=refac_s, solve_fused_s=solve_s,
+            n_refine=int(info["n_refine"]),
+            n_refine_per_system_max=int(
+                np.max(info["n_refine_per_system"])),
+            worst_residual=float(np.max(info["residual"])),
+            n_refine_failed=int(np.sum(info["refine_failed"])),
+            n_fp64_fallback=int(info["n_fp64_fallback"]),
+            fallback_rate=float(info["n_fp64_fallback"]) / k,
+            factor_panel_bytes=eng.memory_stats(k=k)["panel_bytes"],
+        )
+    r64, r32 = rec["dtypes"]["float64"], rec["dtypes"]["float32"]
+    scale = float(np.abs(xs["float64"]).max()) + 1e-30
+    rec["x_diff_vs_fp64"] = float(
+        np.abs(xs["float32"] - xs["float64"]).max()) / scale
+    rec["speedup_refac_fp32"] = (r64["refac_batched_s"]
+                                 / r32["refac_batched_s"])
+    rec["speedup_solve_fp32"] = r64["solve_fused_s"] / r32["solve_fused_s"]
+    rec["panel_bytes_ratio"] = (r32["factor_panel_bytes"]
+                                / r64["factor_panel_bytes"])
+    print(f"[mixed]    {name:14s} n={rec['n']:5d} "
+          f"refac fp64={r64['refac_batched_s']*1e3:7.1f}ms "
+          f"fp32={r32['refac_batched_s']*1e3:7.1f}ms "
+          f"({rec['speedup_refac_fp32']:.2f}x) "
+          f"solve {rec['speedup_solve_fp32']:.2f}x "
+          f"bytes={rec['panel_bytes_ratio']:.2f} "
+          f"resid={r32['worst_residual']:.1e} "
+          f"fallback={r32['fallback_rate']:.2f} "
+          f"xdiff={rec['x_diff_vs_fp64']:.1e}", flush=True)
+    return rec
+
+
+def bench_mixed_precision(k=32, quick=False):
+    """The ``mixed_precision`` section: fp32-factor + fp64-refine over the
+    main suite — refactor/solve speedups over pure fp64, the halved
+    factor-panel bytes, fp64-quality residual parity, and the fp64-fallback
+    rate (healthy suite matrices should never trip the escape hatch)."""
+    recs = {}
+    for name, Ac in suite(quick=quick):
+        recs[name] = bench_mixed_precision_matrix(name, Ac, k)
+    fp32 = [r["dtypes"]["float32"] for r in recs.values()]
+    return dict(
+        k=k, matrices=recs,
+        geomean=dict(
+            speedup_refac_fp32=_geomean(
+                [r["speedup_refac_fp32"] for r in recs.values()]),
+            speedup_solve_fp32=_geomean(
+                [r["speedup_solve_fp32"] for r in recs.values()]),
+            panel_bytes_ratio=_geomean(
+                [r["panel_bytes_ratio"] for r in recs.values()]),
+        ),
+        worst_residual_fp32=max(r["worst_residual"] for r in fp32),
+        worst_x_diff_vs_fp64=max(r["x_diff_vs_fp64"]
+                                 for r in recs.values()),
+        fallback_rate=float(np.mean([r["fallback_rate"] for r in fp32])),
+    )
+
+
 def suite(quick=False, large=False):
     if quick:
         return [("circuit_150", CSR.from_scipy(matrices.circuit_like(150, 1)
@@ -551,7 +644,16 @@ def bench_repeated(k=32, quick=False, large=False,
                    out_path="BENCH_repeated.json", jax_cache=None,
                    jax_cache_warm=False, devices=None, serving=True,
                    large_smoke=False, large_only=False, large_k=4,
-                   amalg_tol=0.2):
+                   amalg_tol=0.2, mixed_only=False):
+    if mixed_only:
+        # the CI mixed-precision smoke: just the fp32-vs-fp64 section
+        out = dict(k=k, jax_compilation_cache=jax_cache or None,
+                   jax_cache_warm=bool(jax_cache_warm),
+                   mixed_precision=bench_mixed_precision(k=k, quick=quick))
+        with open(out_path, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"results → {out_path}")
+        return out
     if large_only:
         # the CI scale lane: just the corpus section, skipping the main
         # suite entirely (the scale job budget is the corpus' budget)
@@ -610,6 +712,9 @@ def bench_repeated(k=32, quick=False, large=False,
                jax_cache_warm=bool(jax_cache_warm),
                matrices=records, geomean_speedup_over_ref_loop=summary,
                analyze=analyze_records)
+    # mixed precision: fp32-factor + fp64-refine vs pure fp64 (refactor
+    # speedup, halved factor-panel bytes, fallback rate)
+    out["mixed_precision"] = bench_mixed_precision(k=k, quick=quick)
     if serving:
         # mixed-pattern serving throughput (smaller request volume on
         # --quick so the CI bench job still records the section)
@@ -665,6 +770,11 @@ def main(argv=None):
     ap.add_argument("--large-k", type=int, default=4,
                     help="system-batch size for the corpus lane's batched "
                          "refactor (smaller than --k: n>=10^4 systems)")
+    ap.add_argument("--mixed-only", action="store_true",
+                    help="run ONLY the mixed_precision section (the CI "
+                         "mixed-precision smoke): fp32-factor+fp64-refine "
+                         "vs fp64 refactor/solve times, factor-panel "
+                         "bytes, residual parity and fp64-fallback rate")
     ap.add_argument("--amalg-tol", type=float, default=0.2,
                     help="amalgamation fill tolerance for the corpus lane "
                          "(HyluOptions.amalg_fill_tol)")
@@ -698,7 +808,8 @@ def main(argv=None):
                    out_path=args.out, jax_cache=cache, jax_cache_warm=warm,
                    devices=args.devices, serving=not args.no_serving,
                    large_smoke=args.large_smoke, large_only=args.large_only,
-                   large_k=args.large_k, amalg_tol=args.amalg_tol)
+                   large_k=args.large_k, amalg_tol=args.amalg_tol,
+                   mixed_only=args.mixed_only)
     return 0
 
 

@@ -30,7 +30,8 @@ from .symbolic import Symbolic
 from . import ref_engine
 from .ref_engine import Factors, SolvePlan
 from .options import (HyluOptions, pattern_key, plan_fingerprint,
-                      _resolve_mesh, _mesh_cache_key)
+                      _resolve_mesh, _mesh_cache_key, np_dtype,
+                      resolve_perturb_eps, resolve_refine_tol)
 
 
 @dataclasses.dataclass
@@ -61,8 +62,9 @@ class Analysis:
     timings: dict
     pattern_key: str = ""      # sha256 of (n, indptr, indices) alone
     fingerprint: str = ""      # pattern_key + plan-affecting options
-    # jit cache keyed on this analysis' plan: (dtype name, use_pallas) →
-    # jax_engine.RepeatedSolveEngine (built lazily on first jax-engine use)
+    # jit cache keyed on this analysis' plan: (factor dtype, refine dtype,
+    # use_pallas, schedule, mesh) → jax_engine.RepeatedSolveEngine (built
+    # lazily on first jax-engine use)
     jit_cache: dict = dataclasses.field(default_factory=dict, repr=False)
 
 
@@ -160,25 +162,37 @@ def _m_values(an: Analysis, a: CSR) -> CSR:
 
 
 def jax_repeated_engine(an: Analysis, dtype=None, use_pallas: bool | None = None,
-                        schedule: str | None = None, mesh=None):
+                        schedule: str | None = None, mesh=None,
+                        refine_dtype=None):
     """The pre-compiled repeated-solve engine for this analysis.
 
-    Built lazily and cached on the analysis (keyed by dtype/pallas/factor
-    schedule/mesh devices), so every subsequent factor/refactor/solve
-    through ``engine="jax"`` — and every batched call — is one
-    already-compiled XLA program.  ``mesh`` (default ``an.opts.mesh``)
-    shards the *batched* programs over the system-batch axis; the scalar
-    refactor/apply programs are always single-device."""
-    import jax.numpy as jnp
+    Built lazily and cached on the analysis (keyed by factor/refine dtype,
+    pallas, factor schedule and mesh devices), so every subsequent
+    factor/refactor/solve through ``engine="jax"`` — and every batched call
+    — is one already-compiled XLA program.  ``dtype`` (default
+    ``an.opts.factor_dtype``) is the factor-panel/substitution precision;
+    ``refine_dtype`` (default ``an.opts.refine_dtype``, ``"auto"`` → fp64
+    whenever x64 is on) is the residual/accumulation precision.  ``mesh``
+    (default ``an.opts.mesh``) shards the *batched* programs over the
+    system-batch axis; the scalar refactor/apply programs are always
+    single-device."""
+    import jax
 
     from .jax_engine import RepeatedSolveEngine
     from .structure import build_solve_structure
 
-    dtype = jnp.float64 if dtype is None else dtype
+    dtype = np_dtype(an.opts.factor_dtype) if dtype is None else dtype
+    if refine_dtype is None and an.opts.refine_dtype not in (None, "auto"):
+        refine_dtype = np_dtype(an.opts.refine_dtype)
+    # the engine applies the same "auto" rule when refine_dtype is None;
+    # resolve here too so the cache key names the engine actually built
+    rname = (np.dtype(refine_dtype).name if refine_dtype is not None
+             else ("float64" if jax.config.jax_enable_x64
+                   else np.dtype(dtype).name))
     use_pallas = an.opts.use_pallas if use_pallas is None else use_pallas
     schedule = an.opts.factor_schedule if schedule is None else schedule
     mesh = _resolve_mesh(an.opts.mesh if mesh is None else mesh)
-    key = (np.dtype(dtype).name, bool(use_pallas), schedule,
+    key = (np.dtype(dtype).name, rname, bool(use_pallas), schedule,
            _mesh_cache_key(mesh))
     eng = an.jit_cache.get(key)
     if eng is None:
@@ -187,9 +201,11 @@ def jax_repeated_engine(an: Analysis, dtype=None, use_pallas: bool | None = None
         eng = RepeatedSolveEngine(
             an.plan, ss, src_map=an.src_map, scale_map=an.scale_map,
             p=an.p, q=an.q, row_scale=an.match.row_scale,
-            col_scale=an.match.col_scale, perturb_eps=an.opts.perturb_eps,
-            dtype=dtype, use_pallas=use_pallas, schedule=schedule,
-            bulk_min_width=an.opts.bulk_min_width, mesh=mesh)
+            col_scale=an.match.col_scale,
+            perturb_eps=resolve_perturb_eps(an.opts, dtype),
+            dtype=dtype, refine_dtype=refine_dtype, use_pallas=use_pallas,
+            schedule=schedule, bulk_min_width=an.opts.bulk_min_width,
+            mesh=mesh)
         an.jit_cache[key] = eng
     return eng
 
@@ -266,6 +282,7 @@ def solve(st: FactorState, b: np.ndarray, refine: bool | None = None) -> tuple:
         eng = jax_repeated_engine(an)
         jf = st.jax_factors
         n_perturb = int(jf.n_perturb)
+        rtol = resolve_refine_tol(opts, eng.refine_dtype)
 
         def lu_apply(rhs: np.ndarray) -> np.ndarray:
             return np.asarray(eng.apply(jf.vals, jf.inode_perm,
@@ -273,6 +290,7 @@ def solve(st: FactorState, b: np.ndarray, refine: bool | None = None) -> tuple:
     else:
         f = st.factors
         n_perturb = f.n_perturb
+        rtol = resolve_refine_tol(opts, "float64")
 
         def lu_apply(rhs: np.ndarray) -> np.ndarray:
             c = (an.match.row_scale * rhs)[an.p][f.inode_perm]
@@ -281,17 +299,19 @@ def solve(st: FactorState, b: np.ndarray, refine: bool | None = None) -> tuple:
             y = np.empty_like(z); y[an.q] = z
             return an.match.col_scale * y
 
-    x = lu_apply(b)
+    # accumulate x and the residual in float64 on the host regardless of the
+    # engine's factor dtype (the batched path does the same in refine_dtype)
+    x = np.asarray(lu_apply(b), dtype=np.float64)
     n_ref = 0
     bnorm = float(np.abs(b).sum()) or 1.0
     resid = float(np.abs(b - st.a.matvec(x)).sum()) / bnorm
     # auto-refine when pivot perturbation occurred (paper §2.3) or the
     # residual is above the target
     do_refine = refine if refine is not None else (
-        n_perturb > 0 or resid > opts.refine_tol)
+        n_perturb > 0 or resid > rtol)
     if do_refine:
         for _ in range(opts.refine_max_iter):
-            if resid <= opts.refine_tol:
+            if resid <= rtol:
                 break
             r = b - st.a.matvec(x)
             x2 = x + lu_apply(r)
@@ -301,6 +321,7 @@ def solve(st: FactorState, b: np.ndarray, refine: bool | None = None) -> tuple:
                 break
             x, resid = x2, resid2
     info = dict(residual=resid, n_refine=n_ref, n_perturb=n_perturb,
+                refine_failed=bool(do_refine and resid > rtol),
                 solve_time=time.perf_counter() - t0)
     return x, info
 

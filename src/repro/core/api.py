@@ -29,8 +29,9 @@ docs/API.md; architecture: docs/ARCHITECTURE.md.
 from __future__ import annotations
 
 from .options import (HyluOptions, PLAN_OPTION_FIELDS, plan_options_key,
-                      pattern_key, plan_fingerprint,
-                      _resolve_mesh, _mesh_cache_key)
+                      pattern_key, plan_fingerprint, dtype_name, np_dtype,
+                      resolve_perturb_eps, resolve_refine_tol,
+                      resolve_dtype_names, _resolve_mesh, _mesh_cache_key)
 from .analysis import (Analysis, FactorState, analyze, factor, refactor,
                        solve, solve_system, jax_repeated_engine,
                        _m_values, _factor_jax)
@@ -43,6 +44,8 @@ from .batched import (BatchedFactorState, factor_batched, solve_batched,
 __all__ = [
     "HyluOptions", "PLAN_OPTION_FIELDS", "plan_options_key",
     "pattern_key", "plan_fingerprint",
+    "dtype_name", "np_dtype", "resolve_perturb_eps", "resolve_refine_tol",
+    "resolve_dtype_names",
     "Analysis", "FactorState", "BatchedFactorState",
     "analyze", "factor", "refactor", "solve", "solve_system",
     "jax_repeated_engine",

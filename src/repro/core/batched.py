@@ -17,7 +17,7 @@ import numpy as np
 
 from .matrix import CSR
 from .analysis import Analysis, analyze, jax_repeated_engine
-from .options import HyluOptions
+from .options import HyluOptions, resolve_refine_tol
 
 
 @dataclasses.dataclass
@@ -109,9 +109,15 @@ def _stage_values(eng, values_batch):
     count by replicating system 0 (well-conditioned; padded systems are
     masked out of every result), and the buffer is placed with the
     engine's batch sharding.  Returns ``(values_dev (K_pad, nnz),
-    values_host | None, k)`` — ``values_host`` is the (K, nnz) float64
-    oracle when the input came from the host, else None (materialized
-    lazily by ``BatchedFactorState.values_batch``)."""
+    values_host | None, k)`` — ``values_host`` is the (K, nnz) oracle in
+    the engine's ``values_dtype`` when the input came from the host, else
+    None (materialized lazily by ``BatchedFactorState.values_batch``).
+
+    Staging honors the engine's ``values_dtype`` — the refine-precision
+    dtype the fused residual matvec runs against: float64 for a pure-fp64
+    or a mixed reduced-factor engine (the original-precision values are
+    what refinement recovers accuracy from), the factor dtype for a pure
+    reduced-precision engine (no silent fp64 upcast + double copy)."""
     import jax
     import jax.numpy as jnp
 
@@ -125,7 +131,8 @@ def _stage_values(eng, values_batch):
                 [v, jnp.broadcast_to(v[:1], (k_pad - k, v.shape[1]))])
     else:
         host = np.ascontiguousarray(
-            np.atleast_2d(np.asarray(values_batch, dtype=np.float64)))
+            np.atleast_2d(np.asarray(values_batch,
+                                     dtype=np.dtype(eng.values_dtype))))
         k = host.shape[0]
         k_pad = _pad_k(eng, k)
         v = host if k_pad == k else np.concatenate(
@@ -166,12 +173,12 @@ def _stage_rhs(eng, b_batch, k: int, copy: bool = False):
         elif copy and b is b_batch:
             b = jnp.array(b)                     # fresh, donatable buffer
     else:
-        b = np.asarray(b_batch, dtype=np.float64)
+        b = np.asarray(b_batch, dtype=np.dtype(eng.values_dtype))
         if b.ndim == 1:
             b = np.broadcast_to(b, (k,) + b.shape)
         if k_pad != k:
             b = np.concatenate(
-                [b, np.zeros((k_pad - k,) + b.shape[1:])])
+                [b, np.zeros((k_pad - k,) + b.shape[1:], dtype=b.dtype)])
     if eng.batch_sharding is not None:
         return jax.device_put(b, eng.batch_sharding)
     return jnp.asarray(b)
@@ -220,6 +227,17 @@ def solve_batched(bst: BatchedFactorState, b_batch: np.ndarray,
     multi-RHS — and info["n_refine_per_system"] counts accepted refinement
     steps per system/RHS.  refine=False skips refinement; refine=None/True
     runs it until converged, stalled, or refine_max_iter.
+    info["refine_failed"] / info["refine_stalled"] are the per-system
+    masks from the fused loop: systems that exited refinement above the
+    (dtype-aware) tolerance, and the subset that stopped improving.
+
+    On a reduced-precision engine (``factor_dtype != "float64"`` with
+    fp64-staged values, i.e. the default mixed path) any refinement-failed
+    system is automatically re-factored and re-solved in float64 — batched,
+    failed subset only — when ``opts.fp64_fallback`` is set:
+    info["fallback_mask"] marks the redone systems, info["n_fp64_fallback"]
+    counts them, and the returned x/residual/masks reflect the fp64 redo,
+    so callers always get fp64-quality answers or an honest failure mask.
 
     donate=True donates the A-values and RHS buffers into the call (the
     sequence-pipeline mode): XLA may reuse their memory, and ``bst`` is
@@ -232,25 +250,81 @@ def solve_batched(bst: BatchedFactorState, b_batch: np.ndarray,
             "this BatchedFactorState was consumed by a donating solve — "
             "refactor (factor_batched) before solving again")
     t0 = time.perf_counter()
+    max_iter = 0 if refine is False else opts.refine_max_iter
+    # the escape hatch needs the original fp64 values, so it only arms on a
+    # reduced-factor engine whose staging (= refine) dtype is float64
+    fallback_armed = (
+        max_iter > 0 and bool(opts.fp64_fallback)
+        and np.dtype(eng.factor_dtype) != np.float64
+        and np.dtype(eng.values_dtype) == np.float64)
     if donate and bst._values_host is None:
         _ = bst.values_batch    # materialize the host oracle before the
         #                         device buffer is donated away
     b_dev = _stage_rhs(eng, b_batch, bst.k)
+    # a donated RHS buffer dies with the call — snapshot it while the
+    # fallback might still need to re-solve a failed subset
+    b_src = np.asarray(b_dev) if (donate and fallback_armed) else b_dev
     solver = eng.refined_batched_solver(*bst.a_pattern, donate=donate)
-    max_iter = 0 if refine is False else opts.refine_max_iter
-    x, resid, n_iter, n_ref_sys = solver(
+    x, resid, n_iter, n_ref_sys, stalled, failed = solver(
         bst.vals, bst.inode_perm, bst.values_dev,
-        b_dev, max_iter, opts.refine_tol)
+        b_dev, max_iter, resolve_refine_tol(opts, eng.refine_dtype))
     if donate:
         bst.consumed = True
         bst.values_dev = None
     k = bst.k
     x = np.asarray(x)[:k]
+    failed_h = np.asarray(failed)[:k]
     info = dict(residual=np.asarray(resid)[:k], n_refine=int(n_iter),
                 n_refine_per_system=np.asarray(n_ref_sys)[:k],
                 n_perturb=bst.n_perturb,
+                refine_stalled=np.asarray(stalled)[:k],
+                refine_failed=failed_h,
+                factor_dtype=np.dtype(eng.factor_dtype).name,
+                fallback_mask=np.zeros(k, bool), n_fp64_fallback=0,
                 solve_time=time.perf_counter() - t0)
+    if fallback_armed and failed_h.any():
+        x = _fp64_redo(bst, b_src, x, info)
+        info["solve_time"] = time.perf_counter() - t0
     return x, info
+
+
+def _fp64_redo(bst: BatchedFactorState, b_src, x: np.ndarray,
+               info: dict) -> np.ndarray:
+    """The per-system fp64 escape hatch of :func:`solve_batched`: re-factor
+    and re-solve the refinement-failed subset in float64 (one batched call
+    at the subset size) and splice the recovered solutions, residuals and
+    masks back into the mixed-precision results.  Needs the fp64-staged
+    values (``bst.values_batch``) — the reduced-precision factors are
+    discarded for these systems."""
+    an = bst.analysis
+    opts = an.opts
+    t0 = time.perf_counter()
+    failed_h = info["refine_failed"]
+    sys_mask = failed_h if failed_h.ndim == 1 else failed_h.any(axis=1)
+    idx = np.nonzero(sys_mask)[0]
+    eng64 = jax_repeated_engine(an, dtype=np.float64,
+                                refine_dtype=np.float64)
+    v_sub = np.ascontiguousarray(
+        np.asarray(bst.values_batch, dtype=np.float64)[idx])
+    b_sub = np.ascontiguousarray(np.asarray(b_src)[idx])
+    v_dev, _, f = _stage_values(eng64, v_sub)
+    jf = eng64.refactor_batched(v_dev)
+    b_dev = _stage_rhs(eng64, b_sub, f)
+    solver = eng64.refined_batched_solver(*bst.a_pattern)
+    x64, resid64, _, n_ref64, st64, fl64 = solver(
+        jf.vals, jf.inode_perm, v_dev, b_dev, opts.refine_max_iter,
+        resolve_refine_tol(opts, "float64"))
+    x = np.array(x)                       # jax views are read-only; splice
+    x[idx] = np.asarray(x64)[:f].astype(x.dtype)
+    for key, new in (("residual", resid64), ("n_refine_per_system", n_ref64),
+                     ("refine_stalled", st64), ("refine_failed", fl64)):
+        merged = np.array(info[key])
+        merged[idx] = np.asarray(new)[:f]
+        info[key] = merged
+    info["fallback_mask"] = sys_mask
+    info["n_fp64_fallback"] = int(len(idx))
+    info["fallback_time"] = time.perf_counter() - t0
+    return x
 
 
 def _solve_batched_hostloop(bst: BatchedFactorState, b_batch: np.ndarray,
@@ -266,7 +340,11 @@ def _solve_batched_hostloop(bst: BatchedFactorState, b_batch: np.ndarray,
     opts = an.opts
     eng = jax_repeated_engine(an)
     t0 = time.perf_counter()
-    b_batch = np.asarray(b_batch, dtype=np.float64)
+    # stage/accumulate in the engine's refine dtype, like the fused path
+    # (the substitution itself runs in the factor dtype inside apply_batched)
+    rdt = np.dtype(eng.refine_dtype)
+    tol = resolve_refine_tol(opts, eng.refine_dtype)
+    b_batch = np.asarray(b_batch, dtype=rdt)
     if b_batch.ndim == 1:
         b_batch = np.broadcast_to(b_batch, (bst.k, b_batch.shape[0]))
 
@@ -281,17 +359,17 @@ def _solve_batched_hostloop(bst: BatchedFactorState, b_batch: np.ndarray,
     bnorm = np.abs(b_batch).sum(axis=1)          # (K,) or (K, m)
     bnorm = np.where(bnorm == 0.0, 1.0, bnorm)
     x = np.asarray(eng.apply_batched(vals_k, inode_k,
-                                     jnp.asarray(b_batch)))
+                                     jnp.asarray(b_batch))).astype(rdt)
     r, resid = residuals(x)
     n_ref = 0
     alive = np.ones(resid.shape, bool)
     max_iter = 0 if refine is False else opts.refine_max_iter
     for _ in range(max_iter):
-        need = alive & (resid > opts.refine_tol)
+        need = alive & (resid > tol)
         if not need.any():
             break
         x2 = x + np.asarray(eng.apply_batched(vals_k, inode_k,
-                                              jnp.asarray(r)))
+                                              jnp.asarray(r))).astype(rdt)
         r2, resid2 = residuals(x2)
         n_ref += 1
         improved = resid2 < resid
@@ -300,17 +378,22 @@ def _solve_batched_hostloop(bst: BatchedFactorState, b_batch: np.ndarray,
         r = np.where(upd[:, None], r2, r)
         resid = np.where(upd, resid2, resid)
         alive = alive & (improved | ~need)
+    failed = (resid > tol) & (max_iter > 0)
     info = dict(residual=resid, n_refine=n_ref, n_perturb=bst.n_perturb,
+                refine_failed=failed, refine_stalled=failed & ~alive,
                 solve_time=time.perf_counter() - t0)
     return x, info
 
 
 def _seed_values(values_batch) -> np.ndarray:
     """The (nnz,) float64 host values that seed the analysis: system 0 of
-    the (possibly committed-device) batch.  Indexes down to one row
-    *before* the host transfer, so a committed (K, nnz) buffer costs one
-    row D2H, not K; accepts a list/tuple of value sets, a (K, nnz) batch,
-    or a single (nnz,) vector."""
+    the (possibly committed-device) batch.  Deliberately float64 whatever
+    the engine dtype — the host analysis (MC64 matching/scaling, ordering)
+    always runs in full precision; the scale maps are cast down once at
+    engine build, not here.  Indexes down to one row *before* the host
+    transfer, so a committed (K, nnz) buffer costs one row D2H, not K;
+    accepts a list/tuple of value sets, a (K, nnz) batch, or a single
+    (nnz,) vector."""
     v0 = values_batch
     while isinstance(v0, (list, tuple)) or getattr(v0, "ndim", 1) > 1:
         v0 = v0[0]
@@ -416,6 +499,7 @@ def _solve_sequence_pipelined(a_pattern, values_steps, b_steps,
     donate = bool(opts.donate)
     solver = eng.refined_batched_solver(*pattern, donate=donate)
     max_iter = opts.refine_max_iter
+    tol = resolve_refine_tol(opts, eng.refine_dtype)
 
     t_all = time.perf_counter()
     # stage step 0 (the analysis already synced the host, so this is cheap);
@@ -431,8 +515,8 @@ def _solve_sequence_pipelined(a_pattern, values_steps, b_steps,
                                             v_dev)
         else:
             jf = eng.refactor_batched(v_dev)
-        x, resid, n_iter, n_ref = solver(jf.vals, jf.inode_perm, v_dev,
-                                         b_dev, max_iter, opts.refine_tol)
+        x, resid, n_iter, n_ref, stalled, failed = solver(
+            jf.vals, jf.inode_perm, v_dev, b_dev, max_iter, tol)
         # stage step t+1 while the device chews on step t — this H2D copy
         # is the one the double-buffering hides
         if t + 1 < n_steps:
@@ -441,7 +525,7 @@ def _solve_sequence_pipelined(a_pattern, values_steps, b_steps,
                 raise ValueError(f"step {t + 1} has batch size {k2}, "
                                  f"step 0 had {k}")
             b_dev = _stage_rhs(eng, b_of(t + 1), k, copy=donate)
-        outs.append((x, resid, n_iter, n_ref))
+        outs.append((x, resid, n_iter, n_ref, stalled, failed))
         n_pert.append(jf.n_perturb)
         prev = jf
     jax.block_until_ready(outs[-1][0])           # the single sync point
@@ -449,11 +533,18 @@ def _solve_sequence_pipelined(a_pattern, values_steps, b_steps,
 
     x = np.stack([np.asarray(o[0])[:k] for o in outs])
     resid = np.stack([np.asarray(o[1])[:k] for o in outs])
+    # the async pipeline reports the failure masks but does not run the
+    # fp64 escape hatch (a mid-stream redo would stall the double
+    # buffering); single-step solve_batched is the fallback-capable path
     info = dict(residual=resid,
                 n_refine=[int(o[2]) for o in outs],
                 n_refine_per_system=np.stack(
                     [np.asarray(o[3])[:k] for o in outs]),
                 n_perturb=np.stack([np.asarray(p)[:k] for p in n_pert]),
+                refine_stalled=np.stack(
+                    [np.asarray(o[4])[:k] for o in outs]),
+                refine_failed=np.stack(
+                    [np.asarray(o[5])[:k] for o in outs]),
                 solve_time=t_all,
                 timings={"preprocess": an.timings, "pipeline": t_all},
                 mode=an.choice.mode, ordering=an.ordering_name,

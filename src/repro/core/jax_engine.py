@@ -664,18 +664,33 @@ class RepeatedSolveEngine:
 
     def __init__(self, plan: FactorPlan, ss, *, src_map, scale_map, p, q,
                  row_scale, col_scale, perturb_eps: float = 1e-8,
-                 dtype=jnp.float64, use_pallas: bool = False,
+                 dtype=jnp.float64, refine_dtype=None,
+                 use_pallas: bool = False,
                  interpret: bool = True, schedule: str = "bucketed",
                  bulk_min_width: int = 8, mesh=None):
-        if np.dtype(dtype) == np.float64 and not jax.config.jax_enable_x64:
-            # without this, float64 silently degrades to float32 and every
-            # solve limps through refinement at ~1e-6 residuals
-            raise RuntimeError(
-                "engine dtype is float64 but jax x64 is disabled — run "
-                "jax.config.update('jax_enable_x64', True) before building "
-                "the engine, or request dtype=jnp.float32 explicitly")
+        if refine_dtype is None:
+            # mirror options.resolve_dtype_names: residual/solution
+            # accumulation (and A-value/RHS staging) happen in fp64 whenever
+            # x64 is available — a reduced factor dtype then still recovers
+            # fp64-accurate solutions through refinement
+            refine_dtype = (jnp.float64 if jax.config.jax_enable_x64
+                            else dtype)
+        for role, dt in (("factor", dtype), ("refine", refine_dtype)):
+            if np.dtype(dt) == np.float64 and not jax.config.jax_enable_x64:
+                # without this, float64 silently degrades to float32 and
+                # every solve limps through refinement at ~1e-6 residuals
+                raise RuntimeError(
+                    f"engine {role} dtype is float64 but jax x64 is "
+                    "disabled — run jax.config.update('jax_enable_x64', "
+                    "True) before building the engine, or request "
+                    "dtype=jnp.float32 explicitly")
         self.n = plan.n
-        self.dtype = dtype
+        self.dtype = dtype             # factor-panel/substitution dtype
+        self.factor_dtype = dtype
+        self.refine_dtype = refine_dtype
+        #: dtype batched A-values/RHS must be staged in (the residual matvec
+        #: runs against these, so they carry the refine precision)
+        self.values_dtype = refine_dtype
         self.plan = plan
         self.bulk_min_width = bulk_min_width
         factor_fn = make_factor_fn(plan, perturb_eps=perturb_eps, dtype=dtype,
@@ -766,19 +781,24 @@ class RepeatedSolveEngine:
         pattern (compile-time constants).  Returns a jitted
 
             solver(vals, inode_perm, a_vals, b, max_iter, tol)
-                -> (x, resid, n_iter, n_ref_sys)
+                -> (x, resid, n_iter, n_ref_sys, stalled, failed)
 
         that runs substitution, the batched CSR residual matvec and the full
         iterative-refinement loop as ONE XLA program: a ``lax.while_loop``
         carries ``(x, r, resid, alive, ...)`` with per-system improved /
         converged masking, so no per-iteration host transfer happens.
+        Substitution runs in the engine's factor dtype; b/a_vals/x/residual
+        are carried in ``refine_dtype`` (stage them in ``values_dtype``).
 
-        b is (K, n) or (K, n, m) multi-RHS; resid / n_ref_sys are (K,) or
-        (K, m) accordingly (1-norm residuals relative to each RHS column).
-        A system (or RHS column) stops refining once its residual is at or
-        below ``tol`` or an iteration fails to improve it — the same
-        acceptance rule as the scalar host path.  ``max_iter=0`` disables
-        refinement (refine=False).
+        b is (K, n) or (K, n, m) multi-RHS; resid / n_ref_sys / stalled /
+        failed are (K,) or (K, m) accordingly (1-norm residuals relative to
+        each RHS column).  A system (or RHS column) stops refining once its
+        residual is at or below ``tol`` or an iteration fails to improve it
+        — the same acceptance rule as the scalar host path.  ``failed``
+        marks systems that exited above ``tol`` (the fp64-fallback trigger);
+        ``stalled`` marks the subset that stopped improving rather than
+        running out of iterations.  ``max_iter=0`` disables refinement
+        (refine=False; both masks are all-False then).
 
         With an engine mesh, the program is shard_mapped over the batch
         axis: each device runs its own refinement loop on its shard (the
@@ -797,13 +817,19 @@ class RepeatedSolveEngine:
 
         matvec = make_csr_matvec_batched(indptr, indices)
         apply_b = self._apply_batched_impl
-        dtype = self.dtype
+        rdtype = self.refine_dtype
         batch_axis = self.batch_axis
 
         def solve_refined(vals, inode_perm, a_vals, b, max_iter, tol):
             multi = b.ndim == 3
-            b = b.astype(dtype)
-            a_vals = a_vals.astype(dtype)
+            # mixed precision: substitution runs in the factor dtype
+            # (apply_b casts its RHS down internally), while b, the
+            # A-values, the solution and the residual are carried in the
+            # refine dtype — the residual must be computed against the
+            # original-precision A or the recoverable accuracy is capped
+            # at eps(factor_dtype)
+            b = b.astype(rdtype)
+            a_vals = a_vals.astype(rdtype)
             bnorm = jnp.sum(jnp.abs(b), axis=1)              # (K,) | (K, m)
             bnorm = jnp.where(bnorm == 0.0, 1.0, bnorm)
 
@@ -817,7 +843,7 @@ class RepeatedSolveEngine:
             # (0 + A⁻¹b ≡ the old explicit base solve).
             x = jnp.zeros_like(b)
             r = b
-            resid = jnp.full(bnorm.shape, jnp.inf, dtype)
+            resid = jnp.full(bnorm.shape, jnp.inf, rdtype)
             alive = jnp.ones(resid.shape, bool)
             n_ref = jnp.zeros(resid.shape, jnp.int32)
 
@@ -828,7 +854,7 @@ class RepeatedSolveEngine:
             def body(carry):
                 x, r, resid, alive, n_ref, it = carry
                 need = alive & (resid > tol)
-                x2 = x + apply_b(vals, inode_perm, r)
+                x2 = x + apply_b(vals, inode_perm, r).astype(rdtype)
                 r2 = b - matvec(a_vals, x2)
                 resid2 = jnp.sum(jnp.abs(r2), axis=1) / bnorm
                 # iteration 0 IS the base solve: accepted unconditionally
@@ -851,7 +877,14 @@ class RepeatedSolveEngine:
                 # iteration count (the only cross-device op in the engine,
                 # and it never feeds back into x)
                 n_iter = jax.lax.pmax(n_iter, batch_axis)
-            return x, resid, n_iter, n_ref
+            # per-system verdicts (meaningful only when refinement ran):
+            # failed = exited above tol; stalled = failed because an
+            # iteration stopped improving (vs. ran out of iterations) —
+            # the escape-hatch signal for the fp64 fallback path
+            ran = jnp.int32(max_iter) > 0
+            failed = (resid > tol) & ran
+            stalled = failed & ~alive
+            return x, resid, n_iter, n_ref, stalled, failed
 
         fn = solve_refined
         if self.mesh is not None:
@@ -865,7 +898,7 @@ class RepeatedSolveEngine:
             # above makes it genuinely replicated
             fn = shard_map(fn, mesh=self.mesh,
                            in_specs=(spec, spec, spec, spec, rep, rep),
-                           out_specs=(spec, spec, rep, spec),
+                           out_specs=(spec, spec, rep, spec, spec, spec),
                            check_rep=False)
         solver = (_jit_donating(fn, donate_argnums=(2, 3)) if donate
                   else jax.jit(fn))

@@ -16,10 +16,19 @@ Fingerprints are the content address of the plan cache
 
 Two analyses share a fingerprint iff they produce interchangeable plans AND
 interchangeable compiled programs.  Runtime-only knobs (``engine``,
-``mesh``, ``donate``, ``refine_max_iter``, ``refine_tol``) are deliberately
-NOT part of the fingerprint: they select how a cached plan is *executed*,
-not what is computed at analysis time (the per-analysis jit cache already
-keys engines on dtype/pallas/schedule/mesh).
+``mesh``, ``donate``, ``refine_max_iter``, ``refine_tol``, ``refine_dtype``,
+``fp64_fallback``) are deliberately NOT part of the fingerprint: they select
+how a cached plan is *executed*, not what is computed at analysis time (the
+per-analysis jit cache already keys engines on dtype/pallas/schedule/mesh).
+
+Mixed precision: ``factor_dtype`` picks the precision of the factor panels
+and the substitution (fp32 halves the bandwidth of the batched-refactor hot
+path); ``refine_dtype`` picks the precision the residual and the solution
+are accumulated in (``"auto"`` → fp64 whenever x64 is enabled).  The
+``perturb_eps``/``refine_tol`` defaults are ``None`` sentinels resolved
+against the relevant dtype's machine epsilon — the historical fp64 literals
+``1e-8``/``1e-12`` fall out exactly for ``factor_dtype="float64"``, and
+explicit values are always honored verbatim.
 """
 from __future__ import annotations
 
@@ -44,9 +53,29 @@ class HyluOptions:
                                            # zeros stay under this fraction
                                            # of their separate storage
                                            # (0 = off, plan unchanged)
-    perturb_eps: float = 1e-8
+    perturb_eps: float | None = None       # pivot-perturbation threshold as a
+                                           # fraction of max|M|; None → 1e-8
+                                           # scaled by sqrt(eps(factor_dtype)
+                                           # / eps(float64)) — exactly 1e-8
+                                           # for float64
     refine_max_iter: int = 3
-    refine_tol: float = 1e-12
+    refine_tol: float | None = None        # refinement residual target; None
+                                           # → 1e-12 scaled by
+                                           # eps(refine_dtype)/eps(float64) —
+                                           # exactly 1e-12 for float64
+    factor_dtype: str = "float64"          # precision of the factor panels +
+                                           # substitution: float64 | float32 |
+                                           # bfloat16 (experimental)
+    refine_dtype: str = "auto"             # precision of residual/solution
+                                           # accumulation in refinement and of
+                                           # staged A-value/RHS batches:
+                                           # auto → float64 when x64 is on
+                                           # (else factor_dtype) | an explicit
+                                           # dtype name (runtime-only)
+    fp64_fallback: bool = True             # batched solve: re-factor+re-solve
+                                           # the refinement-failed subset in
+                                           # float64 (reduced-precision
+                                           # engines only; runtime-only)
     bulk_min_width: int = 8
     engine: str = "ref"                    # ref | jax — default numeric engine
     use_pallas: bool = False               # route jax panel updates via Pallas
@@ -71,15 +100,90 @@ class HyluOptions:
 # compiled engine built from it — the option half of a plan fingerprint.
 PLAN_OPTION_FIELDS = ("force_mode", "orderings", "relax", "max_super",
                       "amalg_fill_tol", "perturb_eps", "bulk_min_width",
-                      "factor_schedule", "use_pallas")
+                      "factor_schedule", "use_pallas", "factor_dtype")
+
+
+# Machine epsilons of the supported factor/refine dtypes, kept as a literal
+# table so this module stays numpy-only (np.finfo rejects the ml_dtypes
+# bfloat16 class on some numpy versions).
+_DTYPE_EPS = {
+    "float64": 2.220446049250313e-16,
+    "float32": 1.1920928955078125e-07,
+    "bfloat16": 0.0078125,
+}
+
+
+def dtype_name(dtype) -> str:
+    """Canonical name ("float64"/"float32"/"bfloat16") of a dtype given as a
+    string, a numpy/jax dtype, or a scalar type."""
+    name = dtype if isinstance(dtype, str) else np.dtype(dtype).name
+    if name not in _DTYPE_EPS:
+        raise ValueError(f"unsupported factor/refine dtype {name!r}: "
+                         f"expected one of {sorted(_DTYPE_EPS)}")
+    return name
+
+
+def np_dtype(dtype) -> np.dtype:
+    """numpy dtype for a supported dtype name (bfloat16 via ml_dtypes)."""
+    name = dtype_name(dtype)
+    if name == "bfloat16":
+        import ml_dtypes
+        return np.dtype(ml_dtypes.bfloat16)
+    return np.dtype(name)
+
+
+def resolve_perturb_eps(opts: HyluOptions | None, dtype=None) -> float:
+    """The effective pivot-perturbation threshold: an explicit
+    ``opts.perturb_eps`` verbatim, else the fp64 literal ``1e-8`` scaled by
+    ``sqrt(eps(dtype)/eps(float64))`` (backward-error of LU grows with the
+    factor dtype's eps; sqrt keeps the perturbation below the error it
+    guards against).  Exactly ``1e-8`` for float64."""
+    opts = opts or HyluOptions()
+    if opts.perturb_eps is not None:
+        return float(opts.perturb_eps)
+    name = dtype_name(opts.factor_dtype if dtype is None else dtype)
+    return 1e-8 * (_DTYPE_EPS[name] / _DTYPE_EPS["float64"]) ** 0.5
+
+
+def resolve_refine_tol(opts: HyluOptions | None, dtype=None) -> float:
+    """The effective refinement residual target: an explicit
+    ``opts.refine_tol`` verbatim, else the fp64 literal ``1e-12`` scaled by
+    ``eps(dtype)/eps(float64)`` where ``dtype`` is the precision the
+    residual is *computed* in (the refine dtype).  Exactly ``1e-12`` for
+    float64 — so the default mixed fp32-factor/fp64-refine path is held to
+    the same fp64-quality target as a pure fp64 solve."""
+    opts = opts or HyluOptions()
+    if opts.refine_tol is not None:
+        return float(opts.refine_tol)
+    name = dtype_name(opts.factor_dtype if dtype is None else dtype)
+    return 1e-12 * (_DTYPE_EPS[name] / _DTYPE_EPS["float64"])
+
+
+def resolve_dtype_names(opts: HyluOptions | None,
+                        x64_enabled: bool = True) -> tuple:
+    """(factor, refine) dtype names under the given x64 availability:
+    ``refine_dtype="auto"`` resolves to float64 whenever x64 is enabled,
+    else to the factor dtype (a pure reduced-precision engine)."""
+    opts = opts or HyluOptions()
+    f = dtype_name(opts.factor_dtype)
+    r = opts.refine_dtype
+    if r in (None, "auto"):
+        r = "float64" if x64_enabled else f
+    return f, dtype_name(r)
 
 
 def plan_options_key(opts: HyluOptions | None) -> tuple:
     """Hashable tuple of the plan/engine-affecting option fields (see
-    ``PLAN_OPTION_FIELDS``) — equal keys ⇒ interchangeable plans+engines."""
+    ``PLAN_OPTION_FIELDS``) — equal keys ⇒ interchangeable plans+engines.
+    ``perturb_eps`` enters resolved against the factor dtype, so the
+    ``None`` default and the equivalent explicit literal fingerprint the
+    same."""
     opts = opts or HyluOptions()
     out = []
     for name in PLAN_OPTION_FIELDS:
+        if name == "perturb_eps":
+            out.append(resolve_perturb_eps(opts))
+            continue
         v = getattr(opts, name)
         out.append(tuple(v) if isinstance(v, (list, tuple)) else v)
     return tuple(out)

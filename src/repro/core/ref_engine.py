@@ -40,10 +40,15 @@ def _trsm_upper(u: np.ndarray, x: np.ndarray) -> np.ndarray:
     return y
 
 
-def factor(plan: FactorPlan, b: CSR, perturb_eps: float = 1e-8) -> Factors:
+def factor(plan: FactorPlan, b: CSR,
+           perturb_eps: float | None = 1e-8) -> Factors:
     """Numeric factorization. b is the preprocessed matrix (scaled, matched,
     reordered); its max |entry| is ~1 after MC64 scaling, so the pivot
-    perturbation threshold is perturb_eps * max|B| ≈ perturb_eps."""
+    perturbation threshold is perturb_eps * max|B| ≈ perturb_eps.
+    ``perturb_eps=None`` (the HyluOptions dtype-aware sentinel) resolves to
+    the fp64 literal 1e-8 — this engine is float64-only."""
+    if perturb_eps is None:
+        perturb_eps = 1e-8
     vals = np.zeros(plan.total_slots, dtype=np.float64)
     vals[plan.a_scatter] = b.data
     amax = float(np.max(np.abs(b.data))) if b.nnz else 1.0

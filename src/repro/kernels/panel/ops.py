@@ -1,4 +1,12 @@
-"""jit'd wrappers for the panel-LU Pallas kernels (scalar + bucketed)."""
+"""jit'd wrappers for the panel-LU Pallas kernels (scalar + bucketed).
+
+Dtype contract: the kernels run entirely in the panel dtype (float64 /
+float32 / bfloat16) — masks and the perturbation threshold are cast to it,
+and the identity-pivot sentinel (1e30) is representable in every supported
+dtype, so the same kernels serve the mixed-precision engine unchanged.
+``eps_p`` should already be scaled to the dtype's machine epsilon
+(``repro.core.options.resolve_perturb_eps``).
+"""
 import jax
 import jax.numpy as jnp
 
@@ -9,10 +17,22 @@ __all__ = ["panel_lu", "panel_lu_batched", "panel_lu_ref",
            "panel_lu_bucketed_ref"]
 
 
+def _eps_in(dtype, eps_p):
+    """``eps_p`` cast to the panel dtype, guarded against underflow: a
+    positive threshold that downcasts to zero (bfloat16 underflows near
+    1e-38) would silently disable pivot perturbation and let exact-zero
+    pivots produce inf/NaN panels — clamp it to the dtype's smallest
+    normal instead.  An exactly-zero eps (perturbation off) stays zero."""
+    eps0 = jnp.asarray(eps_p)
+    eps = eps0.astype(dtype)
+    tiny = jnp.asarray(jnp.finfo(dtype).tiny, dtype)
+    return jnp.where((eps0 > 0) & (eps <= 0), tiny, eps)
+
+
 def panel_lu(panel: jax.Array, nr: int, lsize: int, eps_p,
              interpret: bool = True):
     """Returns (panel, local_perm (int32 nr), n_perturb (int32 scalar))."""
-    eps = jnp.asarray(eps_p, dtype=panel.dtype)
+    eps = _eps_in(panel.dtype, eps_p)
     out, perm, nper = panel_lu_p(panel, eps, nr, lsize, interpret=interpret)
     return out, perm, nper[0]
 
@@ -22,5 +42,5 @@ def panel_lu_batched(panels: jax.Array, wu: int, eps_p,
     """Bucketed panel LU on column-reordered panels (B, nr, wt): the
     leading bucket dim is the Pallas grid, elimination masked to [0, wu).
     Returns (panels, perms (B, nr) int32, n_perturb (B,) int32)."""
-    eps = jnp.asarray(eps_p, dtype=panels.dtype)
+    eps = _eps_in(panels.dtype, eps_p)
     return panel_lu_bucketed_p(panels, eps, wu, interpret=interpret)

@@ -11,6 +11,11 @@ transpose/flip identities
 where J is the row-flip. These are what ``jax_engine`` routes the bulk
 supernode diagonal blocks through when ``use_pallas=True`` (interpret mode
 on CPU; compiled on real TPUs).
+
+Dtype contract: every op runs in its operands' dtype (float64 / float32 /
+bfloat16) — tile padding builds identity diagonals in ``u.dtype`` and the
+solves never upcast, so the mixed-precision engine's reduced-precision
+substitution path flows through unchanged.
 """
 import jax
 import jax.numpy as jnp

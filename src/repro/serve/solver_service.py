@@ -30,7 +30,8 @@ import time
 import numpy as np
 
 from repro.core.matrix import CSR
-from repro.core.options import HyluOptions, plan_fingerprint
+from repro.core.options import (HyluOptions, plan_fingerprint, np_dtype,
+                                resolve_dtype_names)
 from repro.core.plan_cache import PlanCache, DEFAULT_CACHE_DIR
 from repro.core.batched import factor_batched, solve_batched
 
@@ -41,10 +42,16 @@ class SolveRequest:
 
     a    — CSR (pattern + values); anything with ``tocsr()`` is converted
     b    — (n,) right-hand side or (n, m) multi-RHS
-    tag  — opaque caller id, passed through to the result"""
+    tag  — opaque caller id, passed through to the result
+    factor_dtype — per-request precision routing: None uses the service's
+           options template; a dtype name ("float32"/"float64"/"bfloat16")
+           overrides it for this request.  The dtype is part of the plan
+           fingerprint, so mixed-precision traffic groups into separate
+           dispatches per dtype automatically."""
     a: CSR
     b: np.ndarray
     tag: object = None
+    factor_dtype: str | None = None
 
 
 @dataclasses.dataclass
@@ -57,6 +64,10 @@ class SolveResult:
     fingerprint: str           # the plan-cache key this request hit
     group_size: int            # how many requests shared the dispatch group
     tag: object = None
+    refine_failed: bool = False   # refinement exited above tolerance (after
+                                  # any fp64 fallback redo) — an honest
+                                  # per-request quality flag
+    factor_dtype: str = "float64"  # precision this request was factored in
 
 
 def _as_csr(a) -> CSR:
@@ -104,7 +115,8 @@ class SolverService:
             raise ValueError(f"batch_size must be >= 1, got {batch_size}")
         self.batch_size = batch_size
         self.stats = dict(requests=0, groups=0, dispatches=0,
-                          padded_systems=0, patterns_seen=0, solve_s=0.0)
+                          padded_systems=0, patterns_seen=0, solve_s=0.0,
+                          refine_failed=0, fp64_fallbacks=0)
         self._pattern_modes: dict[str, str] = {}   # fingerprint → kernel mode
         self._pending: list[SolveRequest] = []
 
@@ -137,20 +149,32 @@ class SolverService:
                 a, b = r
                 r = SolveRequest(a=a, b=b)
             a = _as_csr(r.a)
-            b = np.asarray(r.b, dtype=np.float64)
+            # keep the submitted precision here — the dispatch stages the
+            # whole chunk in the engine's staging dtype in one cast, instead
+            # of the old unconditional fp64 upcast + second copy
+            b = np.asarray(r.b)
             if b.ndim not in (1, 2) or b.shape[0] != a.n:
                 raise ValueError(
                     f"request RHS shape {b.shape} does not match its "
                     f"matrix (n={a.n}; expected (n,) or (n, m))")
-            reqs.append(SolveRequest(a=a, b=b, tag=r.tag))
+            reqs.append(SolveRequest(a=a, b=b, tag=r.tag,
+                                     factor_dtype=r.factor_dtype))
         t0 = time.perf_counter()
 
         # group by (fingerprint, RHS tail shape), preserving request order
         # within each group; differing multi-RHS widths of one pattern
-        # dispatch separately (the batched RHS must be rectangular)
+        # dispatch separately (the batched RHS must be rectangular).
+        # factor_dtype is a PLAN_OPTION_FIELDS member, so a per-request
+        # dtype override lands in a different fingerprint — mixed-precision
+        # traffic routes into separate groups with no extra machinery
         groups: dict[tuple, list[int]] = {}
+        group_opts: dict[str, HyluOptions] = {}
         for i, r in enumerate(reqs):
-            fp = plan_fingerprint(r.a, self.opts)
+            opts_i = (self.opts if r.factor_dtype is None else
+                      dataclasses.replace(self.opts,
+                                          factor_dtype=r.factor_dtype))
+            fp = plan_fingerprint(r.a, opts_i)
+            group_opts[fp] = opts_i
             groups.setdefault((fp, r.b.shape[1:]), []).append(i)
 
         results: list = [None] * len(reqs)
@@ -158,7 +182,7 @@ class SolverService:
             if fp not in self._pattern_modes:
                 self.stats["patterns_seen"] += 1
             self.stats["groups"] += 1
-            an = self.cache.get_or_analyze(reqs[idxs[0]].a, self.opts,
+            an = self.cache.get_or_analyze(reqs[idxs[0]].a, group_opts[fp],
                                            fingerprint=fp)
             self._pattern_modes[fp] = an.choice.mode
             step = self.batch_size or len(idxs)
@@ -174,11 +198,18 @@ class SolverService:
     def _dispatch(self, an, fp, reqs, chunk, pad_to, group_size, results):
         """One padded batched factor+solve for ``chunk`` (request indices
         of one pattern/RHS-shape group), scattered into ``results``."""
+        import jax
+
         g = len(chunk)
         k = max(pad_to, g)
         a0 = reqs[chunk[0]].a
-        vb = np.empty((k, a0.nnz), dtype=np.float64)
-        bb = np.zeros((k,) + reqs[chunk[0]].b.shape, dtype=np.float64)
+        # stage in the engine's staging (= refine) dtype: fp64 for pure-fp64
+        # and mixed reduced-factor engines, the factor dtype for a pure
+        # reduced-precision engine — one cast, no fp64 detour
+        _, rname = resolve_dtype_names(an.opts, jax.config.jax_enable_x64)
+        sdt = np_dtype(rname)
+        vb = np.empty((k, a0.nnz), dtype=sdt)
+        bb = np.zeros((k,) + reqs[chunk[0]].b.shape, dtype=sdt)
         for j, i in enumerate(chunk):
             vb[j] = reqs[i].a.data
             bb[j] = reqs[i].b
@@ -190,7 +221,11 @@ class SolverService:
         x, info = solve_batched(bst, bb)
         self.stats["dispatches"] += 1
         self.stats["padded_systems"] += k - g
+        self.stats["fp64_fallbacks"] += int(info.get("n_fp64_fallback", 0))
+        failed = np.asarray(info["refine_failed"])
         for j, i in enumerate(chunk):
+            req_failed = bool(np.any(failed[j]))
+            self.stats["refine_failed"] += int(req_failed)
             results[i] = SolveResult(
                 x=x[j],
                 residual=(float(info["residual"][j])
@@ -200,7 +235,9 @@ class SolverService:
                              if np.ndim(info["n_refine_per_system"][j])
                              else info["n_refine_per_system"][j]),
                 n_perturb=int(info["n_perturb"][j]),
-                fingerprint=fp, group_size=group_size, tag=reqs[i].tag)
+                fingerprint=fp, group_size=group_size, tag=reqs[i].tag,
+                refine_failed=req_failed,
+                factor_dtype=info["factor_dtype"])
 
     # ------------------------------------------------------------ introspect
     @property

@@ -1,0 +1,315 @@
+"""Mixed-precision factorization: fp32/bf16 factors + fp64 refinement.
+
+The tentpole contract under test: with ``factor_dtype="float32"`` the
+panels and substitution run in reduced precision, but the fused refinement
+loop accumulates the residual (against the ORIGINAL fp64 A values) and the
+correction in float64 — so the batched solve recovers fp64-accurate
+solutions, matching a pure-fp64 oracle to 1e-10 across the scenario matrix.
+When refinement stalls (ill-conditioned system where the dtype-scaled pivot
+perturbation bites), the per-system escape hatch re-factors and re-solves
+exactly the failed subset in float64 and splices the recovery back in, so
+callers always get fp64-quality answers or an honest failure mask.
+"""
+import numpy as np
+import pytest
+
+from repro.core import CSR, HyluOptions, analyze, factor, solve
+from repro.core.api import (factor_batched, solve_batched, solve_sequence,
+                            jax_repeated_engine, plan_fingerprint,
+                            pattern_key, resolve_perturb_eps,
+                            resolve_refine_tol, resolve_dtype_names,
+                            dtype_name, np_dtype)
+
+from tests.helpers import scenario_system, random_system
+
+SCENARIO_MATRIX = ["circuit", "banded", "denseish", "unsym"]
+PATHS = ["jit", "pallas-interpret"]
+K = 4
+N = 40
+
+
+def _system(scenario):
+    if scenario == "unsym":
+        Ac, _, b = random_system(N, density=0.15, seed=11)
+        return Ac, b
+    Ac, _, b, _ = scenario_system(scenario, n=N, seed=3)
+    return Ac, b
+
+
+def _value_sets(Ac, k, seed):
+    rng = np.random.default_rng(seed)
+    return Ac.data[None, :] * rng.uniform(0.8, 1.2, (k, Ac.nnz))
+
+
+def _batch(Ac, b, opts):
+    an = analyze(Ac, opts)
+    vb = _value_sets(Ac, K, seed=7)
+    bb = np.random.default_rng(17).normal(size=(K, Ac.n))
+    bst = factor_batched(an, Ac, vb)
+    x, info = solve_batched(bst, bb)
+    return an, bst, x, info, vb, bb
+
+
+# --------------------------------------------------------------------------
+# fp32 factor + fp64 refine ≡ fp64 oracle across the scenario matrix
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("path", PATHS)
+@pytest.mark.parametrize("scenario", SCENARIO_MATRIX)
+def test_mixed_fp32_matches_fp64_oracle(scenario, path):
+    Ac, b = _system(scenario)
+    pallas = path == "pallas-interpret"
+    an32, bst32, x32, info32, vb, bb = _batch(
+        Ac, b, HyluOptions(engine="jax", use_pallas=pallas,
+                           factor_dtype="float32"))
+    an64, bst64, x64, info64, _, _ = _batch(
+        Ac, b, HyluOptions(engine="jax", use_pallas=pallas))
+
+    # the reduced-precision engine really factored in fp32 ...
+    assert np.dtype(bst32.vals.dtype) == np.float32
+    assert info32["factor_dtype"] == "float32"
+    # ... and still hits the fp64 refinement target without any fallback
+    assert info32["residual"].max() < 1e-10, (scenario, path)
+    assert not info32["refine_failed"].any(), (scenario, path)
+    assert info32["n_fp64_fallback"] == 0
+    scale = np.abs(x64).max() + 1e-30
+    assert np.abs(x32 - x64).max() / scale < 1e-10, (scenario, path)
+    assert np.abs(info32["residual"] - info64["residual"]).max() < 1e-10
+
+
+def test_mixed_scalar_solve():
+    """The scalar analyze→factor→solve path honors factor_dtype too."""
+    Ac, b = _system("circuit")
+    an = analyze(Ac, HyluOptions(engine="jax", factor_dtype="float32"))
+    x, info = solve(factor(an, Ac), b)
+    assert x.dtype == np.float64
+    assert info["residual"] < 1e-10
+    assert info["refine_failed"] is False
+
+
+# --------------------------------------------------------------------------
+# stall escape hatch: failed systems re-factored/re-solved in fp64
+# --------------------------------------------------------------------------
+def _illconditioned_batch(n=24, seed=0):
+    """[well, ill, well, ill] dense batch on one pattern.  The ill systems
+    have spectrum logspace(0, -5): under the fp32 dtype-scaled perturbation
+    threshold (~2.3e-4 of max|M|) their small pivots get perturbed and fp32
+    refinement stalls, while the fp64 threshold (1e-8) leaves them alone
+    and recovers — exactly the escape-hatch scenario."""
+    rng = np.random.default_rng(seed)
+    q1, _ = np.linalg.qr(rng.normal(size=(n, n)))
+    q2, _ = np.linalg.qr(rng.normal(size=(n, n)))
+    ill = q1 @ np.diag(np.logspace(0, -5, n)) @ q2
+    well = ill + np.diag(3.0 * np.ones(n))
+    indptr = np.arange(0, n * n + 1, n, dtype=np.int64)
+    indices = np.tile(np.arange(n, dtype=np.int64), n)
+    Ac = CSR(n, indptr, indices, well.reshape(-1).copy())
+    vb = np.stack([well.reshape(-1), ill.reshape(-1),
+                   well.reshape(-1), ill.reshape(-1)])
+    bb = rng.normal(size=(4, n))
+    return Ac, vb, bb
+
+
+def test_stall_escape_hatch_recovers_in_fp64():
+    Ac, vb, bb = _illconditioned_batch()
+    an = analyze(Ac, HyluOptions(engine="jax", factor_dtype="float32"))
+    bst = factor_batched(an, Ac, vb)
+    x, info = solve_batched(bst, bb)
+    # exactly the ill systems went through the fp64 redo ...
+    assert info["fallback_mask"].tolist() == [False, True, False, True]
+    assert info["n_fp64_fallback"] == 2
+    assert "fallback_time" in info
+    # ... and came back recovered: honest final masks, fp64-quality x
+    assert not info["refine_failed"].any()
+    assert info["residual"].max() < 1e-10
+    for i in range(4):
+        a_i = vb[i].reshape(Ac.n, Ac.n)
+        x_ref = np.linalg.solve(a_i, bb[i])
+        scale = np.abs(x_ref).max() + 1e-30
+        assert np.abs(x[i] - x_ref).max() / scale < 1e-8, i
+
+
+def test_stall_without_fallback_reports_honest_failure():
+    Ac, vb, bb = _illconditioned_batch()
+    an = analyze(Ac, HyluOptions(engine="jax", factor_dtype="float32",
+                                 fp64_fallback=False))
+    bst = factor_batched(an, Ac, vb)
+    x, info = solve_batched(bst, bb)
+    assert info["refine_failed"].tolist() == [False, True, False, True]
+    # stalled ⊆ failed (these systems may exit at max_iter still improving)
+    assert not (info["refine_stalled"] & ~info["refine_failed"]).any()
+    assert not info["fallback_mask"].any()
+    assert info["n_fp64_fallback"] == 0
+    # the well systems are still fine; the ill ones sit above the
+    # fp64-quality tolerance the mixed path promises (that's the failure)
+    tol = resolve_refine_tol(an.opts, "float64")
+    assert info["residual"][[0, 2]].max() < tol
+    assert info["residual"][[1, 3]].min() > tol
+
+
+def test_fp64_engine_never_arms_fallback():
+    """A pure-fp64 batch on the same ill systems: the fp64 perturbation
+    threshold doesn't bite, refinement converges, no fallback machinery."""
+    Ac, vb, bb = _illconditioned_batch()
+    an = analyze(Ac, HyluOptions(engine="jax"))
+    bst = factor_batched(an, Ac, vb)
+    x, info = solve_batched(bst, bb)
+    assert not info["refine_failed"].any()
+    assert not info["refine_stalled"].any()
+    assert info["n_fp64_fallback"] == 0
+    assert info["residual"].max() < 1e-10
+
+
+def test_stall_masks_in_sequence_pipeline():
+    """The T-step pipeline surfaces per-step failure masks (but leaves the
+    fp64 redo to single-step solve_batched — documented behavior)."""
+    Ac, vb, bb = _illconditioned_batch()
+    x, info = solve_sequence(Ac, [vb, vb], bb,
+                             HyluOptions(engine="jax",
+                                         factor_dtype="float32"))
+    assert info["refine_failed"].shape == (2, 4)
+    assert info["refine_failed"].tolist() == [[False, True, False, True]] * 2
+    assert info["refine_stalled"].shape == (2, 4)
+    assert not (info["refine_stalled"] & ~info["refine_failed"]).any()
+
+
+# --------------------------------------------------------------------------
+# dtype staging parity: the right buffers in the right precision
+# --------------------------------------------------------------------------
+def test_mixed_engine_staging_dtypes():
+    """Mixed path: factors fp32, staged A values/RHS fp64 (the residual
+    must see the original-precision values to recover accuracy)."""
+    Ac, b = _system("circuit")
+    an = analyze(Ac, HyluOptions(engine="jax", factor_dtype="float32"))
+    eng = jax_repeated_engine(an)
+    assert np.dtype(eng.factor_dtype) == np.float32
+    assert np.dtype(eng.refine_dtype) == np.float64
+    assert np.dtype(eng.values_dtype) == np.float64
+    bst = factor_batched(an, Ac, _value_sets(Ac, K, seed=7))
+    assert np.dtype(bst.vals.dtype) == np.float32
+    assert np.dtype(bst.values_dev.dtype) == np.float64
+    assert bst.values_batch.dtype == np.float64
+    # halved factor-panel bytes is exactly the memory win the bench records
+    assert eng.memory_stats(k=K)["panel_bytes"] * 2 == \
+        jax_repeated_engine(an, dtype=np.float64).memory_stats(
+            k=K)["panel_bytes"]
+
+
+def test_pure_fp32_engine_stages_no_float64():
+    """refine_dtype="float32" opts out of fp64 accumulation entirely: no
+    float64 buffer anywhere on the path (the fp32-serving configuration)."""
+    Ac, b = _system("circuit")
+    an = analyze(Ac, HyluOptions(engine="jax", factor_dtype="float32",
+                                 refine_dtype="float32"))
+    eng = jax_repeated_engine(an)
+    assert np.dtype(eng.values_dtype) == np.float32
+    bst = factor_batched(an, Ac, _value_sets(Ac, K, seed=7))
+    bb = np.random.default_rng(17).normal(size=(K, Ac.n))
+    x, info = solve_batched(bst, bb)
+    for buf in (bst.vals, bst.values_dev, bst.values_batch, x):
+        assert np.dtype(buf.dtype) == np.float32, buf.dtype
+    # the fallback must not arm without fp64-staged values
+    assert info["n_fp64_fallback"] == 0 and not info["fallback_mask"].any()
+    # fp32 residual floor, fp32 tolerance: a healthy system still converges
+    assert info["residual"].max() < resolve_refine_tol(an.opts, "float32")
+
+
+def test_hostloop_oracle_mixed_parity():
+    """The host-loop reference follows the same mixed-precision recipe and
+    agrees with the fused loop."""
+    from repro.core.api import _solve_batched_hostloop
+    Ac, b = _system("banded")
+    an = analyze(Ac, HyluOptions(engine="jax", factor_dtype="float32"))
+    bst = factor_batched(an, Ac, _value_sets(Ac, K, seed=7))
+    bb = np.random.default_rng(17).normal(size=(K, Ac.n))
+    xf, inff = solve_batched(bst, bb)
+    xh, infh = _solve_batched_hostloop(bst, bb)
+    assert not infh["refine_failed"].any()
+    assert not infh["refine_stalled"].any()
+    scale = np.abs(xh).max() + 1e-30
+    assert np.abs(xf - xh).max() / scale < 1e-10
+    assert infh["residual"].max() < 1e-10
+
+
+# --------------------------------------------------------------------------
+# bfloat16 (experimental): usable because the fp64 hatch backstops it
+# --------------------------------------------------------------------------
+def test_bf16_recovers_via_fallback():
+    Ac, b = _system("circuit")
+    an = analyze(Ac, HyluOptions(engine="jax", factor_dtype="bfloat16"))
+    eng = jax_repeated_engine(an)
+    assert dtype_name(eng.factor_dtype) == "bfloat16"
+    bst = factor_batched(an, Ac, _value_sets(Ac, K, seed=7))
+    bb = np.random.default_rng(17).normal(size=(K, Ac.n))
+    x, info = solve_batched(bst, bb)
+    assert info["factor_dtype"] == "bfloat16"
+    # whether bf16 refinement converged or the hatch fired, the contract is
+    # the same: fp64-quality answers and an all-clear failure mask
+    assert not info["refine_failed"].any()
+    assert info["residual"].max() < 1e-10
+
+
+def test_panel_eps_underflow_guard():
+    """A positive perturbation threshold that underflows to zero in the
+    panel dtype is clamped to the smallest normal (bf16 underflows near
+    1e-38); an exactly-zero eps (perturbation off) stays zero."""
+    import jax.numpy as jnp
+    from repro.kernels.panel.ops import _eps_in
+    assert float(_eps_in(jnp.bfloat16, 1e-30)) > 0.0
+    assert float(_eps_in(jnp.float32, 1e-42)) > 0.0
+    assert float(_eps_in(jnp.bfloat16, 0.0)) == 0.0
+    assert float(_eps_in(jnp.float32, 1e-4)) == np.float32(1e-4)
+
+
+# --------------------------------------------------------------------------
+# fingerprints + dtype-aware option resolution
+# --------------------------------------------------------------------------
+def test_factor_dtype_is_plan_affecting_refine_knobs_are_not():
+    Ac, b = _system("circuit")
+    base = plan_fingerprint(Ac, HyluOptions())
+    fp32 = plan_fingerprint(Ac, HyluOptions(factor_dtype="float32"))
+    bf16 = plan_fingerprint(Ac, HyluOptions(factor_dtype="bfloat16"))
+    assert len({base, fp32, bf16}) == 3
+    # the pattern address is dtype-independent — one symbolic analysis
+    assert pattern_key(Ac) == pattern_key(Ac)
+    an32 = analyze(Ac, HyluOptions(factor_dtype="float32"))
+    an64 = analyze(Ac, HyluOptions())
+    assert an32.pattern_key == an64.pattern_key
+    assert an32.fingerprint != an64.fingerprint
+    # runtime-only mixed-precision knobs share the fingerprint
+    for o in (HyluOptions(refine_dtype="float32"),
+              HyluOptions(fp64_fallback=False),
+              HyluOptions(refine_tol=1e-9)):
+        assert plan_fingerprint(Ac, o) == base, o
+    # the None perturb_eps default fingerprints like its fp64 literal
+    assert plan_fingerprint(Ac, HyluOptions(perturb_eps=1e-8)) == base
+    assert plan_fingerprint(Ac, HyluOptions(perturb_eps=1e-6)) != base
+
+
+def test_dtype_aware_option_resolution():
+    eps64, eps32 = np.finfo(np.float64).eps, np.finfo(np.float32).eps
+    assert resolve_perturb_eps(HyluOptions()) == 1e-8
+    assert resolve_refine_tol(HyluOptions()) == 1e-12
+    o32 = HyluOptions(factor_dtype="float32")
+    assert np.isclose(resolve_perturb_eps(o32),
+                      1e-8 * np.sqrt(eps32 / eps64))
+    assert np.isclose(resolve_refine_tol(o32, "float32"),
+                      1e-12 * (eps32 / eps64))
+    # the mixed path resolves the tol against the REFINE dtype → still the
+    # fp64-quality promise
+    assert resolve_refine_tol(o32, "float64") == 1e-12
+    # explicit overrides are honored verbatim, old-literal semantics intact
+    assert resolve_perturb_eps(HyluOptions(perturb_eps=1e-6)) == 1e-6
+    assert resolve_refine_tol(HyluOptions(refine_tol=0.0)) == 0.0
+    assert resolve_refine_tol(HyluOptions(refine_tol=0.0), "float32") == 0.0
+    # dtype plumbing helpers
+    assert resolve_dtype_names(o32, x64_enabled=True) == \
+        ("float32", "float64")
+    assert resolve_dtype_names(o32, x64_enabled=False) == \
+        ("float32", "float32")
+    assert resolve_dtype_names(
+        HyluOptions(factor_dtype="float32", refine_dtype="float32"),
+        x64_enabled=True) == ("float32", "float32")
+    assert np_dtype("float32") == np.float32
+    assert np_dtype("bfloat16").itemsize == 2
+    with pytest.raises(ValueError, match="unsupported factor/refine dtype"):
+        dtype_name("float16")

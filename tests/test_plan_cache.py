@@ -131,7 +131,7 @@ def test_memory_hit_honors_callers_runtime_options(tmp_path):
     an2 = cache.get_or_analyze(Ac, o2)
     assert cache.stats["hits"] == 1 and cache.stats["analyze_calls"] == 1
     assert an2.opts is o2                      # caller's runtime config wins
-    assert an.opts.refine_tol == 1e-12         # first caller's view intact
+    assert an.opts.refine_tol is None          # first caller's view intact
     assert an2.fingerprint == an.fingerprint
     assert an2.plan is an.plan                 # artifact shared, not copied
     assert an2.jit_cache is an.jit_cache       # compiled engines shared

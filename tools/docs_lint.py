@@ -13,7 +13,12 @@ Checks, repo-relative:
      option field (``PLAN_OPTION_FIELDS``);
   5. the corpus scale lane stays documented: every corpus matrix and
      ``large``-section record field in docs/BENCHMARKS.md, the memory
-     accounting + amalgamation + cache-root surface in docs/API.md.
+     accounting + amalgamation + cache-root surface in docs/API.md;
+  6. the mixed-precision surface stays documented: the dtype resolvers
+     and per-system failure/fallback info fields in docs/API.md, the
+     precision dataflow in docs/ARCHITECTURE.md, and the
+     ``mixed_precision`` bench fields + ``--mixed-only`` flag in
+     docs/BENCHMARKS.md.
 
     PYTHONPATH=src python tools/docs_lint.py
 """
@@ -163,6 +168,45 @@ def check_scale_lane_documented() -> list:
     return errors
 
 
+def check_mixed_precision_documented() -> list:
+    """The mixed-precision surface: dtype resolvers + per-system
+    failure/fallback info fields in docs/API.md, the precision dataflow
+    in docs/ARCHITECTURE.md, and the ``mixed_precision`` bench section in
+    docs/BENCHMARKS.md."""
+    with open(os.path.join(REPO, "docs/API.md"), encoding="utf-8") as f:
+        api_text = f.read()
+    with open(os.path.join(REPO, "docs/ARCHITECTURE.md"),
+              encoding="utf-8") as f:
+        arch_text = f.read()
+    with open(os.path.join(REPO, "docs/BENCHMARKS.md"),
+              encoding="utf-8") as f:
+        bench_text = f.read()
+    errors = []
+    # plain substring: these appear inside signatures / info["..."] forms
+    for name in ("resolve_perturb_eps", "resolve_refine_tol",
+                 "resolve_dtype_names", "dtype_name", "np_dtype",
+                 "refine_failed", "refine_stalled", "fallback_mask",
+                 "n_fp64_fallback"):
+        if name not in api_text:
+            errors.append(f"docs/API.md: mixed-precision name `{name}` "
+                          "undocumented")
+    for name in ("factor_dtype", "refine_dtype", "fp64_fallback"):
+        if f"`{name}`" not in arch_text:
+            errors.append(f"docs/ARCHITECTURE.md: precision-dataflow "
+                          f"name `{name}` unmentioned")
+    mixed_fields = ("speedup_refac_fp32", "speedup_solve_fp32",
+                    "panel_bytes_ratio", "x_diff_vs_fp64",
+                    "worst_residual", "fallback_rate", "n_fp64_fallback",
+                    "factor_panel_bytes", "n_refine_per_system_max")
+    errors.extend(
+        f"docs/BENCHMARKS.md: `mixed_precision` field `{n}` undocumented"
+        for n in mixed_fields if n not in bench_text)
+    if "--mixed-only" not in bench_text:
+        errors.append("docs/BENCHMARKS.md: bench flag `--mixed-only` "
+                      "undocumented")
+    return errors
+
+
 def check_readme_links_docs() -> list:
     with open(os.path.join(REPO, "README.md"), encoding="utf-8") as f:
         text = f.read()
@@ -173,13 +217,14 @@ def check_readme_links_docs() -> list:
 def main() -> int:
     errors = check_links() + check_options_documented() \
         + check_serving_documented() + check_scale_lane_documented() \
-        + check_readme_links_docs()
+        + check_mixed_precision_documented() + check_readme_links_docs()
     for e in errors:
         print(f"docs-lint: {e}", file=sys.stderr)
     if not errors:
         n = len(DOC_FILES)
         print(f"docs-lint: OK ({n} files, all links + HyluOptions fields "
-              "+ plan-cache/serving surface + corpus scale lane)")
+              "+ plan-cache/serving surface + corpus scale lane + "
+              "mixed-precision surface)")
     return 1 if errors else 0
 
 

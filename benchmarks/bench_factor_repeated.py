@@ -322,6 +322,87 @@ def bench_serving(k_per_pattern=8, reps=2, batch_size=8, cache_root=None):
     return rec
 
 
+def bench_serving_async(n_requests=520, batch_size=8, fault_rate=0.15,
+                        n=32, seed=0, deadline_ms=200.0,
+                        max_linger_ms=20.0):
+    """The ``serving_async`` section: the continuous-batching async server
+    (AsyncSolverServer) under a >=500-request mixed-pattern load-generator
+    stream laced with the full fault matrix (``serve.faultinject``).
+    Records steady-state throughput (req/s), p50/p99 latency,
+    deadline-miss / reject / quarantine rates, and the robustness contract
+    (zero lost requests, healthy traffic at fp64-oracle parity) — the
+    serving tier's perf trajectory."""
+    import asyncio
+
+    from repro.serve.solver_service import SolverService
+    from repro.serve.async_server import AsyncSolverServer
+    from repro.serve import faultinject
+
+    async def _run():
+        service = SolverService(cache_dir=None, batch_size=batch_size)
+        server = AsyncSolverServer(
+            service,
+            max_queue_per_group=n_requests,   # load generator submits the
+            max_pending=n_requests + 8,       # whole stream up front —
+            #                                   backpressure rejects would
+            #                                   pollute the throughput number
+            max_linger_ms=max_linger_ms,
+            default_deadline_ms=deadline_ms)
+        async with server:
+            stream = faultinject.make_stream(
+                n_requests, fault_rate=fault_rate, seed=seed, n=n)
+            # warm analyze + engine compile outside the timed window (one
+            # healthy request per (pattern, RHS-shape) group), so req/s and
+            # the percentiles are steady-state serving numbers
+            seen = set()
+            for item in stream:
+                if item.kind is not None:
+                    continue
+                key = (id(item.a.indptr), item.b.shape[1:])
+                if key not in seen:
+                    seen.add(key)
+                    await server.solve(item.a, item.b, tag=("warmup",))
+            server._latencies_ms.clear()
+            t0 = time.perf_counter()
+            report = await faultinject.run_stream(server, stream,
+                                                  warmup=False)
+            report["wall_s"] = time.perf_counter() - t0
+        return report
+
+    report = asyncio.run(_run())
+    violations = faultinject.check_report(report)
+    s = report["server_stats"]
+    rec = dict(
+        n_requests=n_requests, batch_size=batch_size, fault_rate=fault_rate,
+        deadline_ms=deadline_ms, wall_s=report["wall_s"],
+        req_per_s=n_requests / report["wall_s"],
+        p50_ms=s["p50_ms"], p99_ms=s["p99_ms"],
+        deadline_miss_rate=s["deadline_miss_rate"],
+        reject_rate=s["reject_rate"],
+        retries=s["retries"], quarantined=s["quarantined"],
+        failed=s["failed"], dispatch_batches=s["dispatch_batches"],
+        statuses=report["by_status"],
+        lost=report["lost"], zero_lost=report["lost"] == 0,
+        worst_healthy_err=report["worst_healthy_err"],
+        n_healthy_checked=report["n_healthy_checked"],
+        n_violations=len(violations),
+    )
+    print(f"[serving-async] {n_requests} requests "
+          f"(fault_rate={fault_rate:.2f}, batch={batch_size}): "
+          f"{rec['req_per_s']:7.1f} req/s "
+          f"p50={rec['p50_ms']:.1f}ms p99={rec['p99_ms']:.1f}ms "
+          f"miss={rec['deadline_miss_rate']:.3f} "
+          f"reject={rec['reject_rate']:.3f} "
+          f"quarantined={rec['quarantined']} "
+          f"healthy_err={rec['worst_healthy_err']:.1e} "
+          f"lost={rec['lost']}", flush=True)
+    if violations:
+        raise AssertionError(
+            f"serving-async robustness contract violated "
+            f"({len(violations)}): " + "; ".join(violations[:5]))
+    return rec
+
+
 def _peak_rss_mb() -> float:
     """Process high-water resident set in MB (linux ru_maxrss is KB).
     Monotone — per-phase snapshots record the watermark *after* each
@@ -644,7 +725,27 @@ def bench_repeated(k=32, quick=False, large=False,
                    out_path="BENCH_repeated.json", jax_cache=None,
                    jax_cache_warm=False, devices=None, serving=True,
                    large_smoke=False, large_only=False, large_k=4,
-                   amalg_tol=0.2, mixed_only=False):
+                   amalg_tol=0.2, mixed_only=False,
+                   serving_async_only=False):
+    if serving_async_only:
+        # the CI serving-chaos lane: just the async-server load-generator
+        # section.  Merge into an existing results file instead of
+        # clobbering the other sections, so the committed trajectory keeps
+        # its full shape when only this lane reruns.
+        out = {}
+        if os.path.exists(out_path):
+            try:
+                with open(out_path) as f:
+                    out = json.load(f)
+            except (OSError, ValueError):
+                out = {}
+        out["serving_async"] = bench_serving_async(
+            n_requests=80 if quick else 520,
+            fault_rate=0.15)
+        with open(out_path, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"results → {out_path}")
+        return out
     if mixed_only:
         # the CI mixed-precision smoke: just the fp32-vs-fp64 section
         out = dict(k=k, jax_compilation_cache=jax_cache or None,
@@ -720,6 +821,10 @@ def bench_repeated(k=32, quick=False, large=False,
         # --quick so the CI bench job still records the section)
         out["serving"] = bench_serving(
             k_per_pattern=2 if quick else 8, reps=1 if quick else 2)
+        # async continuous-batching server under the fault-injection load
+        # generator (>=500-request stream on full runs)
+        out["serving_async"] = bench_serving_async(
+            n_requests=80 if quick else 520, fault_rate=0.15)
     if devices and devices > 1:
         # multi-device sweep on the first suite matrix (throughput vs
         # device count; bit-exact parity is the test suite's job)
@@ -770,6 +875,13 @@ def main(argv=None):
     ap.add_argument("--large-k", type=int, default=4,
                     help="system-batch size for the corpus lane's batched "
                          "refactor (smaller than --k: n>=10^4 systems)")
+    ap.add_argument("--serving-async", action="store_true",
+                    help="run ONLY the serving_async section (the CI "
+                         "serving-chaos lane): the async continuous-"
+                         "batching server under the fault-injection load "
+                         "generator — req/s, p50/p99 latency, deadline-"
+                         "miss and reject rates, merged into the "
+                         "serving_async section of the results JSON")
     ap.add_argument("--mixed-only", action="store_true",
                     help="run ONLY the mixed_precision section (the CI "
                          "mixed-precision smoke): fp32-factor+fp64-refine "
@@ -809,7 +921,8 @@ def main(argv=None):
                    devices=args.devices, serving=not args.no_serving,
                    large_smoke=args.large_smoke, large_only=args.large_only,
                    large_k=args.large_k, amalg_tol=args.amalg_tol,
-                   mixed_only=args.mixed_only)
+                   mixed_only=args.mixed_only,
+                   serving_async_only=args.serving_async)
     return 0
 
 

@@ -230,6 +230,10 @@ def solve_batched(bst: BatchedFactorState, b_batch: np.ndarray,
     info["refine_failed"] / info["refine_stalled"] are the per-system
     masks from the fused loop: systems that exited refinement above the
     (dtype-aware) tolerance, and the subset that stopped improving.
+    info["escalation"] lists the recovery stages this call ran ("refine",
+    then "fp64_fallback" when the escape hatch redid a failed subset) —
+    the serving layer's escalation ladder appends its own perturbed-retry
+    stages on top of this record.
 
     On a reduced-precision engine (``factor_dtype != "float64"`` with
     fp64-staged values, i.e. the default mixed path) any refinement-failed
@@ -281,11 +285,34 @@ def solve_batched(bst: BatchedFactorState, b_batch: np.ndarray,
                 refine_failed=failed_h,
                 factor_dtype=np.dtype(eng.factor_dtype).name,
                 fallback_mask=np.zeros(k, bool), n_fp64_fallback=0,
-                solve_time=time.perf_counter() - t0)
+                solve_time=time.perf_counter() - t0,
+                escalation=(["refine"] if max_iter > 0 else []))
+    if max_iter > 0:
+        # a NaN/Inf residual or solution must count as failed: the device
+        # mask is `resid > tol`, and NaN compares False — without this a
+        # numerically singular system's NaN solution would sail through
+        # flagged converged (silent garbage instead of an honest failure)
+        failed_h = info["refine_failed"] = _nonfinite_failed(x, info)
     if fallback_armed and failed_h.any():
         x = _fp64_redo(bst, b_src, x, info)
+        info["escalation"].append("fp64_fallback")
+        # the redo's own masks come from the same `> tol` comparison —
+        # guard them too in case the fp64 re-solve is still non-finite
+        info["refine_failed"] = _nonfinite_failed(x, info)
         info["solve_time"] = time.perf_counter() - t0
     return x, info
+
+
+def _nonfinite_failed(x: np.ndarray, info: dict) -> np.ndarray:
+    """``refine_failed`` with non-finite residuals/solutions OR-ed in:
+    per-system (or per system/RHS for a (K, m) residual) True wherever
+    the reported mask is set, the residual is NaN/Inf, or the solution
+    contains a non-finite entry."""
+    failed = np.asarray(info["refine_failed"])
+    resid = np.asarray(info["residual"])
+    bad = ~np.isfinite(resid)
+    x_bad = ~np.isfinite(x.reshape(x.shape[0], -1)).all(axis=1)
+    return failed | bad | (x_bad if bad.ndim == 1 else x_bad[:, None])
 
 
 def _fp64_redo(bst: BatchedFactorState, b_src, x: np.ndarray,

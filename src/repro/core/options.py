@@ -76,6 +76,19 @@ class HyluOptions:
                                            # the refinement-failed subset in
                                            # float64 (reduced-precision
                                            # engines only; runtime-only)
+    deadline_ms: float | None = None       # serving: default per-request
+                                           # latency budget for the async
+                                           # server's deadline-based flush;
+                                           # None = no deadline
+                                           # (runtime-only)
+    retry_max: int = 1                     # serving escalation ladder: how
+                                           # many perturbed re-factor retries
+                                           # a refinement-failed request gets
+                                           # after the fp64 fallback, before
+                                           # it is quarantined (runtime-only)
+    retry_perturb_boost: float = 1e4       # multiplier applied to the
+                                           # resolved perturb_eps per retry
+                                           # attempt (runtime-only)
     bulk_min_width: int = 8
     engine: str = "ref"                    # ref | jax — default numeric engine
     use_pallas: bool = False               # route jax panel updates via Pallas
@@ -157,6 +170,21 @@ def resolve_refine_tol(opts: HyluOptions | None, dtype=None) -> float:
         return float(opts.refine_tol)
     name = dtype_name(opts.factor_dtype if dtype is None else dtype)
     return 1e-12 * (_DTYPE_EPS[name] / _DTYPE_EPS["float64"])
+
+
+def resolve_retry_perturb(opts: HyluOptions | None, attempt: int,
+                          dtype=None) -> float:
+    """The pivot-perturbation threshold for retry ``attempt`` (1-based) of
+    the serving escalation ladder: the resolved base threshold
+    (:func:`resolve_perturb_eps`) boosted by ``retry_perturb_boost`` per
+    attempt.  A boosted threshold is an *explicit* ``perturb_eps``, so it
+    lands in a distinct plan fingerprint — retries factor through their own
+    cached plans and never perturb the healthy traffic's engines."""
+    opts = opts or HyluOptions()
+    if attempt < 1:
+        raise ValueError(f"retry attempt is 1-based, got {attempt}")
+    return (resolve_perturb_eps(opts, dtype)
+            * float(opts.retry_perturb_boost) ** attempt)
 
 
 def resolve_dtype_names(opts: HyluOptions | None,

@@ -1,0 +1,344 @@
+"""Chaos suite: the serving robustness contract under injected faults.
+
+Drives the full fault matrix (``serve.faultinject.FAULT_KINDS`` — NaN/Inf
+values, NaN RHS, wrong-shape RHS, numerically singular and ill-conditioned
+systems, deadline storms) plus queue-overflow pressure through the async
+server and the synchronous service, asserting the contract the serving
+tier lives by:
+
+* every submitted request receives exactly ONE terminal result
+  (solved / rejected / failed / quarantined) — zero losses;
+* zero silently-wrong results — a non-converged solution is never
+  returned as ``solved``;
+* healthy requests sharing a batch with poisoned neighbors still match an
+  independent dense-fp64 oracle to <=1e-10;
+* one pattern group's dispatch exception cannot lose another group's
+  results (error isolation);
+* the escalation ladder runs end to end: refine → fp64 fallback →
+  perturbed re-factor retries → quarantine with diagnostics.
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.core.plan_cache import PlanCache
+from repro.serve import faultinject
+from repro.serve.async_server import AsyncSolverServer
+from repro.serve.faultinject import (build_pattern, healthy_values, inject,
+                                     fp64_oracle, make_stream, run_stream,
+                                     check_report, _with_values,
+                                     FAULT_KINDS)
+from repro.serve.solver_service import (SolverService, InvalidRequestError,
+                                        ERR_NONFINITE_VALUES,
+                                        ERR_NONFINITE_RHS,
+                                        ERR_SHAPE_MISMATCH, ERR_QUEUE_FULL,
+                                        ERR_DISPATCH, ERR_QUARANTINED,
+                                        STATUS_SOLVED, STATUS_REJECTED,
+                                        STATUS_FAILED, STATUS_QUARANTINED,
+                                        TERMINAL_STATUSES)
+
+N = 24  # system size: small enough that per-pattern compiles stay cheap
+
+# one shared in-memory plan cache so the suite's patterns analyze and
+# compile once across tests (engines live on the cached Analysis objects)
+_CACHE = PlanCache(capacity=64, directory=None)
+
+
+def _service(batch_size=4, **opt_kw):
+    from repro.core import HyluOptions
+    return SolverService(opts=HyluOptions(**opt_kw), cache=_CACHE,
+                         batch_size=batch_size)
+
+
+# ---------------------------------------------------------------- the storm
+def test_fault_storm_exactly_one_terminal_result_each():
+    """The headline contract: a mixed-pattern stream interleaving ALL
+    fault kinds with healthy traffic through the async server — zero
+    lost, zero silent-wrong, per-kind expected statuses, healthy
+    fp64-oracle parity <=1e-10."""
+    async def main():
+        async with AsyncSolverServer(_service(), max_queue_per_group=128,
+                                     max_pending=256,
+                                     max_linger_ms=20.0) as server:
+            stream = make_stream(40, fault_rate=0.35, seed=5, n=N)
+            return await run_stream(server, stream), stream
+
+    report, stream = asyncio.run(main())
+    kinds = {item.kind for item in stream if item.kind}
+    assert len(kinds) >= 5, f"fault mix too thin: {kinds}"
+    violations = check_report(report)
+    assert not violations, "\n".join(violations)
+    assert report["lost"] == 0
+    assert report["n_outcomes"] == len(stream)
+    assert set(report["by_status"]) <= set(TERMINAL_STATUSES)
+    assert report["by_status"][STATUS_SOLVED] > 0
+    assert report["by_status"][STATUS_REJECTED] > 0
+    assert report["worst_healthy_err"] <= faultinject.ORACLE_RTOL
+    assert report["n_healthy_checked"] > 0
+
+
+def test_healthy_neighbors_keep_fp64_parity_in_poisoned_batch():
+    """Healthy requests batched WITH a numerically-singular and an
+    ill-conditioned neighbor (same pattern group, same vmapped dispatch)
+    still match the dense fp64 oracle — per-lane numerics are isolated."""
+    pat = build_pattern("circuit", n=N, seed=1)
+    rng = np.random.default_rng(7)
+    healthy = [( _with_values(pat, healthy_values(pat, 100 + i)),
+                 rng.standard_normal(N)) for i in range(3)]
+    singular = inject("singular_values", pat, seed=8)
+    ill = inject("ill_conditioned", pat, seed=9)
+
+    svc = _service(batch_size=8)
+    reqs = [healthy[0], (singular.a, singular.b), healthy[1],
+            (ill.a, ill.b), healthy[2]]
+    res = svc.solve_batch(reqs)
+    assert all(r.status in TERMINAL_STATUSES for r in res)
+    for (a, b), r in zip(healthy, (res[0], res[2], res[4])):
+        assert r.status == STATUS_SOLVED and not r.refine_failed
+        x0 = fp64_oracle(a, b)
+        err = np.abs(r.x - x0).max() / np.abs(x0).max()
+        assert err <= 1e-10, err
+    for r in (res[1], res[3]):
+        # poisoned neighbors are never returned as silent garbage
+        assert r.status in (STATUS_QUARANTINED, STATUS_FAILED,
+                            STATUS_SOLVED)
+        if r.status == STATUS_SOLVED:
+            assert not r.refine_failed
+
+
+# ------------------------------------------------------------- admission
+def test_admission_rejects_are_typed():
+    pat = build_pattern("banded", n=N, seed=1)
+    svc = _service()
+    cases = dict(nan_values=ERR_NONFINITE_VALUES,
+                 inf_values=ERR_NONFINITE_VALUES,
+                 nan_rhs=ERR_NONFINITE_RHS,
+                 wrong_shape_rhs=ERR_SHAPE_MISMATCH)
+    # sync submit(): eager typed raise, nothing enters the window
+    for kind, code in cases.items():
+        bad = inject(kind, pat, seed=11)
+        with pytest.raises(InvalidRequestError) as ei:
+            svc.submit(bad.a, bad.b)
+        assert ei.value.error.code == code
+    assert svc.flush() == []
+
+    # solve_batch(): typed rejected result in place, neighbors untouched
+    good_a = _with_values(pat, healthy_values(pat, 12))
+    good_b = np.random.default_rng(12).standard_normal(N)
+    bad = inject("nan_values", pat, seed=13)
+    res = svc.solve_batch([(good_a, good_b), (bad.a, bad.b)])
+    assert res[0].status == STATUS_SOLVED
+    assert res[1].status == STATUS_REJECTED
+    assert res[1].error.code == ERR_NONFINITE_VALUES
+    assert res[1].x is None
+    assert svc.stats["rejected"] == 1
+
+    # async submit(): same eager typed raise
+    async def main():
+        async with AsyncSolverServer(_service()) as server:
+            with pytest.raises(InvalidRequestError) as ei:
+                await server.submit(bad.a, bad.b)
+            return ei.value.error.code
+
+    assert asyncio.run(main()) == ERR_NONFINITE_VALUES
+
+
+def test_queue_overflow_backpressure_is_typed_not_unbounded():
+    """Submitting past the bounded per-group queue yields immediate typed
+    ``queue_full`` rejections; every admitted request still resolves on
+    drain — exactly one terminal result per submit either way."""
+    pat = build_pattern("circuit", n=N, seed=1)
+    rng = np.random.default_rng(3)
+
+    async def main():
+        server = AsyncSolverServer(
+            _service(batch_size=None), max_queue_per_group=4,
+            max_pending=64,
+            max_linger_ms=10_000.0)   # no time-based flush: pressure builds
+        futs = []
+        async with server:
+            for i in range(10):
+                a = _with_values(pat, healthy_values(pat, 200 + i))
+                futs.append(await server.submit(a, rng.standard_normal(N),
+                                                tag=i))
+            # exactly the overflow (10 - 4) must already be rejected
+            done = [f for f in futs if f.done()]
+            assert len(done) == 6
+            for f in done:
+                r = f.result()
+                assert r.status == STATUS_REJECTED
+                assert r.error.code == ERR_QUEUE_FULL
+                assert r.error.detail["scope"] == "group"
+        # context exit drains: the 4 admitted requests resolve solved
+        results = [await f for f in futs]
+        stats = server.stats()
+        return results, stats
+
+    results, stats = asyncio.run(main())
+    assert len(results) == 10
+    assert sum(r.status == STATUS_SOLVED for r in results) == 4
+    assert sum(r.status == STATUS_REJECTED for r in results) == 6
+    assert stats["rejected_full"] == 6
+    assert stats["reject_rate"] == pytest.approx(0.6)
+    assert stats["queue_depth"] == 0
+
+
+def test_deadline_storm_flushes_and_flags_misses():
+    """A storm of microscopic deadlines: the deadline trigger flushes
+    partially-full batches immediately, nothing is dropped for lateness,
+    and every late completion is flagged + counted."""
+    pat = build_pattern("banded", n=N, seed=1)
+    rng = np.random.default_rng(4)
+
+    async def main():
+        server = AsyncSolverServer(
+            _service(batch_size=8), max_queue_per_group=64, max_pending=64,
+            max_linger_ms=10_000.0,   # only the deadline trigger can flush
+            deadline_margin_ms=0.5)
+        async with server:
+            futs = []
+            for i in range(6):
+                a = _with_values(pat, healthy_values(pat, 300 + i))
+                futs.append(await server.submit(
+                    a, rng.standard_normal(N), tag=i, deadline_ms=1e-3))
+            results = [await f for f in futs]
+        return results, server.stats()
+
+    results, stats = asyncio.run(main())
+    assert all(r.status == STATUS_SOLVED for r in results)
+    assert all(not r.refine_failed for r in results)
+    # a 1 us budget is always missed — and the miss is data, not a drop
+    assert all(r.deadline_missed for r in results)
+    assert all(r.latency_s is not None for r in results)
+    assert stats["deadline_misses"] == 6
+    assert stats["deadline_miss_rate"] == pytest.approx(6 / 6)
+
+
+# ------------------------------------------------------- escalation ladder
+def test_singular_values_walk_the_ladder_to_quarantine():
+    """A numerically singular system (structurally fine) survives
+    admission, fails refinement, consumes its perturbed re-factor
+    retries, and lands in quarantine with diagnostics — never a silent
+    NaN solution."""
+    pat = build_pattern("circuit", n=N, seed=1)
+    bad = inject("singular_values", pat, seed=21)
+    svc = _service(batch_size=4, retry_max=2)
+    res = svc.solve_batch([(bad.a, bad.b)])
+    r = res[0]
+    assert r.status == STATUS_QUARANTINED
+    assert r.error.code == ERR_QUARANTINED
+    assert r.n_retries == 2
+    assert svc.stats["retries"] == 2
+    assert svc.stats["quarantined"] == 1
+    d = r.error.detail
+    assert d["n_retries"] == 2 and "residual" in d and "n_perturb" in d
+
+
+def test_retry_opts_route_through_distinct_fingerprints():
+    """The ladder's retries factor under a boosted perturb_eps — an
+    explicit plan-option change, so they hit their own plan-cache entries
+    and never mutate the healthy traffic's engines."""
+    from repro.core.options import (HyluOptions, plan_fingerprint,
+                                    resolve_retry_perturb,
+                                    resolve_perturb_eps)
+
+    pat = build_pattern("circuit", n=N, seed=1)
+    opts = HyluOptions()
+    fp0 = plan_fingerprint(pat, opts)
+    e1 = resolve_retry_perturb(opts, 1)
+    e2 = resolve_retry_perturb(opts, 2)
+    assert e1 == pytest.approx(resolve_perturb_eps(opts)
+                               * opts.retry_perturb_boost)
+    assert e2 > e1
+    import dataclasses
+    fp1 = plan_fingerprint(pat, dataclasses.replace(opts, perturb_eps=e1))
+    fp2 = plan_fingerprint(pat, dataclasses.replace(opts, perturb_eps=e2))
+    assert len({fp0, fp1, fp2}) == 3
+    with pytest.raises(ValueError):
+        resolve_retry_perturb(opts, 0)
+
+
+# ---------------------------------------------------------- group isolation
+def test_dispatch_exception_in_one_group_cannot_lose_other_groups(
+        monkeypatch):
+    """Satellite bugfix regression: an exception inside ONE pattern
+    group's dispatch yields typed ``failed`` results for that group only —
+    the other groups' computed results are returned, not lost (the seed
+    behavior raised out of flush and dropped the whole window)."""
+    import repro.serve.solver_service as ss
+    from repro.core.options import plan_fingerprint
+
+    pat_ok = build_pattern("circuit", n=N, seed=1)
+    pat_boom = build_pattern("denseish", n=N, seed=1)
+    svc = _service(batch_size=4)
+    fp_boom = plan_fingerprint(pat_boom, svc.opts)
+
+    real = ss.factor_batched
+
+    def exploding(an, pattern, vb, *a, **kw):
+        if an.fingerprint == fp_boom:
+            raise RuntimeError("injected dispatch explosion")
+        return real(an, pattern, vb, *a, **kw)
+
+    monkeypatch.setattr(ss, "factor_batched", exploding)
+
+    rng = np.random.default_rng(6)
+    reqs, kinds = [], []
+    for i in range(6):
+        pat = (pat_boom, pat_ok)[i % 2]
+        kinds.append("boom" if pat is pat_boom else "ok")
+        reqs.append((_with_values(pat, healthy_values(pat, 400 + i)),
+                     rng.standard_normal(N)))
+    res = svc.solve_batch(reqs)
+    assert len(res) == 6 and all(r is not None for r in res)
+    for kind, r in zip(kinds, res):
+        if kind == "ok":
+            assert r.status == STATUS_SOLVED and r.x is not None
+        else:
+            assert r.status == STATUS_FAILED
+            assert r.error.code == ERR_DISPATCH
+            assert "injected dispatch explosion" in r.error.message
+            assert r.error.detail["stage"] == "dispatch"
+            assert r.x is None
+    assert svc.stats["failed"] == 3
+
+    # flush() path: the window is cleared even with the poisoned group
+    for a, b in reqs:
+        svc.submit(a, b)
+    out = svc.flush()
+    assert len(out) == 6
+    assert svc.flush() == []    # queue actually cleared
+
+
+def test_async_window_survives_service_level_exception():
+    """Belt-and-braces: if solve_batch itself ever raised, the async
+    dispatch barrier turns the whole window into typed failed results
+    rather than hanging the futures."""
+    class ExplodingService:
+        opts = SolverService(cache=_CACHE).opts
+        batch_size = 4
+        stats = dict(rejected=0, retries=0, quarantined=0, failed=0)
+
+        def _opts_for(self, req, retry_attempt=0):
+            return self.opts
+
+        def solve_batch(self, reqs):
+            raise RuntimeError("whole-window explosion")
+
+    pat = build_pattern("circuit", n=N, seed=1)
+
+    async def main():
+        server = AsyncSolverServer(ExplodingService(),
+                                   max_linger_ms=5.0)
+        async with server:
+            fut = await server.submit(
+                _with_values(pat, healthy_values(pat, 500)),
+                np.random.default_rng(9).standard_normal(N))
+            return await fut
+
+    r = asyncio.run(main())
+    assert r.status == STATUS_FAILED
+    assert r.error.code == ERR_DISPATCH
+    assert r.error.detail["stage"] == "window"
+    assert "whole-window explosion" in r.error.message

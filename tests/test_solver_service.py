@@ -164,28 +164,51 @@ def test_submit_flush_and_pairs(tmp_path):
     assert res2[0].residual < 1e-10
 
 
-def test_bad_requests_raise(tmp_path):
+def test_bad_requests_get_typed_rejections(tmp_path):
+    """Malformed requests never raise out of solve_batch — they come back
+    as typed ``rejected`` results in place (taxonomy codes), so the rest
+    of the window is dispatched normally."""
+    from repro.serve.solver_service import (ERR_SHAPE_MISMATCH,
+                                            ERR_BAD_MATRIX, STATUS_REJECTED,
+                                            STATUS_SOLVED)
+
     svc = SolverService(cache_dir=str(tmp_path))
     Ac, _, b, _ = scenario_system("circuit", n=36, seed=0)
-    with pytest.raises(ValueError, match="RHS shape"):
-        svc.solve_batch([SolveRequest(a=Ac, b=np.zeros(Ac.n + 1))])
-    with pytest.raises(TypeError, match="CSR"):
-        svc.solve_batch([SolveRequest(a=np.eye(3), b=np.zeros(3))])
+    res = svc.solve_batch([SolveRequest(a=Ac, b=np.zeros(Ac.n + 1)),
+                           SolveRequest(a=np.eye(3), b=np.zeros(3)),
+                           SolveRequest(a=Ac, b=b)])
+    assert res[0].status == STATUS_REJECTED
+    assert res[0].error.code == ERR_SHAPE_MISMATCH
+    assert res[1].status == STATUS_REJECTED
+    assert res[1].error.code == ERR_BAD_MATRIX
+    assert res[2].status == STATUS_SOLVED and res[2].residual < 1e-10
+    assert svc.stats["rejected"] == 2
     with pytest.raises(ValueError, match="batch_size"):
         SolverService(batch_size=0)
 
 
-def test_flush_keeps_queue_on_validation_error(tmp_path):
-    """One malformed request must not discard the rest of the window: a
-    failed flush leaves everything queued for a corrected retry."""
+def test_submit_validates_eagerly_and_flush_never_loses_the_window(
+        tmp_path):
+    """The window can only ever hold admissible requests: a malformed
+    submit raises a typed InvalidRequestError immediately (nothing is
+    queued), and flush always clears the queue with one terminal result
+    per queued request."""
+    from repro.serve.solver_service import (InvalidRequestError,
+                                            ERR_SHAPE_MISMATCH,
+                                            ERR_NONFINITE_VALUES)
+
     svc = SolverService(cache_dir=str(tmp_path), batch_size=4)
     Ac, _, b, _ = scenario_system("circuit", n=36, seed=0)
     svc.submit(Ac, b, tag="good")
-    svc.submit(Ac, np.zeros(Ac.n + 1), tag="bad")
-    with pytest.raises(ValueError, match="RHS shape"):
-        svc.flush()
-    assert len(svc._pending) == 2              # nothing silently lost
-    svc._pending.pop()                         # drop the malformed one
+    with pytest.raises(InvalidRequestError) as ei:
+        svc.submit(Ac, np.zeros(Ac.n + 1), tag="bad")
+    assert ei.value.error.code == ERR_SHAPE_MISMATCH
+    bad_vals = Ac.data.copy()
+    bad_vals[0] = np.nan
+    with pytest.raises(InvalidRequestError) as ei:
+        svc.submit(CSR(Ac.n, Ac.indptr, Ac.indices, bad_vals), b)
+    assert ei.value.error.code == ERR_NONFINITE_VALUES
+    assert len(svc._pending) == 1              # only the good one queued
     res = svc.flush()
     assert len(res) == 1 and res[0].tag == "good"
     assert res[0].residual < 1e-10

@@ -18,7 +18,12 @@ Checks, repo-relative:
      and per-system failure/fallback info fields in docs/API.md, the
      precision dataflow in docs/ARCHITECTURE.md, and the
      ``mixed_precision`` bench fields + ``--mixed-only`` flag in
-     docs/BENCHMARKS.md.
+     docs/BENCHMARKS.md;
+  7. the fault-tolerant async serving surface stays documented: every
+     error-taxonomy code and terminal status, the ``AsyncSolverServer``
+     parameters and stats in docs/API.md, the async dataflow in
+     docs/ARCHITECTURE.md, and the ``serving_async`` bench fields +
+     ``--serving-async`` flag + serving-chaos lane in docs/BENCHMARKS.md.
 
     PYTHONPATH=src python tools/docs_lint.py
 """
@@ -207,6 +212,62 @@ def check_mixed_precision_documented() -> list:
     return errors
 
 
+def check_async_serving_documented() -> list:
+    """The fault-tolerant async serving surface: the error taxonomy codes
+    and terminal statuses, every ``AsyncSolverServer`` constructor
+    parameter and server-stats field in docs/API.md, the async dataflow
+    in docs/ARCHITECTURE.md, and the ``serving_async`` bench fields +
+    ``--serving-async`` flag + serving-chaos lane in docs/BENCHMARKS.md."""
+    import inspect
+
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    import repro.serve.solver_service as ss
+    from repro.serve.async_server import AsyncSolverServer
+
+    with open(os.path.join(REPO, "docs/API.md"), encoding="utf-8") as f:
+        api_text = f.read()
+    with open(os.path.join(REPO, "docs/ARCHITECTURE.md"),
+              encoding="utf-8") as f:
+        arch_text = f.read()
+    with open(os.path.join(REPO, "docs/BENCHMARKS.md"),
+              encoding="utf-8") as f:
+        bench_text = f.read()
+    errors = []
+    # every taxonomy code and terminal status, introspected from the
+    # module constants so new codes cannot ship undocumented
+    codes = [getattr(ss, n) for n in dir(ss) if n.startswith("ERR_")]
+    for code in codes + list(ss.TERMINAL_STATUSES):
+        if f"`{code}`" not in api_text:
+            errors.append(f"docs/API.md: error code / status `{code}` "
+                          "undocumented")
+    for name in ("SolveError", "InvalidRequestError", "validate_request",
+                 "TERMINAL_STATUSES", "resolve_retry_perturb",
+                 "AsyncSolverServer", "escalation"):
+        if name not in api_text:
+            errors.append(f"docs/API.md: async-serving name `{name}` "
+                          "undocumented")
+    params = [p for p in inspect.signature(
+        AsyncSolverServer.__init__).parameters if p != "self"]
+    errors.extend(
+        f"docs/API.md: AsyncSolverServer parameter `{p}` undocumented"
+        for p in params if f"`{p}`" not in api_text)
+    for name in ("AsyncSolverServer", "faultinject", "deadline_missed",
+                 "escalation ladder"):
+        if name not in arch_text:
+            errors.append(f"docs/ARCHITECTURE.md: async-serving "
+                          f"dataflow name `{name}` unmentioned")
+    async_fields = ("req_per_s", "p50_ms", "p99_ms", "deadline_miss_rate",
+                    "reject_rate", "quarantined", "dispatch_batches",
+                    "worst_healthy_err", "zero_lost", "n_violations")
+    errors.extend(
+        f"docs/BENCHMARKS.md: `serving_async` field `{n}` undocumented"
+        for n in async_fields if f"`{n}`" not in bench_text)
+    for name in ("--serving-async", "serving-chaos"):
+        if name not in bench_text:
+            errors.append(f"docs/BENCHMARKS.md: `{name}` undocumented")
+    return errors
+
+
 def check_readme_links_docs() -> list:
     with open(os.path.join(REPO, "README.md"), encoding="utf-8") as f:
         text = f.read()
@@ -217,14 +278,15 @@ def check_readme_links_docs() -> list:
 def main() -> int:
     errors = check_links() + check_options_documented() \
         + check_serving_documented() + check_scale_lane_documented() \
-        + check_mixed_precision_documented() + check_readme_links_docs()
+        + check_mixed_precision_documented() \
+        + check_async_serving_documented() + check_readme_links_docs()
     for e in errors:
         print(f"docs-lint: {e}", file=sys.stderr)
     if not errors:
         n = len(DOC_FILES)
         print(f"docs-lint: OK ({n} files, all links + HyluOptions fields "
               "+ plan-cache/serving surface + corpus scale lane + "
-              "mixed-precision surface)")
+              "mixed-precision surface + async-serving surface)")
     return 1 if errors else 0
 
 
